@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Benchmarks run REDUCED configurations by default (CPU container); pass
+--full via the environment variable REPRO_BENCH_FULL=1 for paper-scale
+settings. Every benchmark prints ``name,us_per_call,derived`` CSV rows so
+``python -m benchmarks.run`` yields one machine-readable artifact.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def fl_common(**overrides):
+    """Shared FLConfig kwargs, reduced for CPU."""
+    base = dict(
+        n_devices=50 if FULL else 10,
+        n_air=5 if FULL else 2,
+        n_rounds=30 if FULL else 6,
+        h_local=5 if FULL else 3,
+        train_fraction=1.0 if FULL else 0.02,
+        eval_size=4096 if FULL else 512,
+        seed=0,
+    )
+    base.update(overrides)
+    return base
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Mean microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,31 @@
+"""Section IV-D: optimizer complexity scaling.
+
+Measures wall time of the offloading optimizer vs |G_n| and |A| and checks
+the (log-factor-dominated) near-linear scaling in the node counts."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build_default_sagin, optimize_offloading
+
+from .common import row, timeit
+
+
+def main():
+    times = {}
+    for n_dev, n_air in [(5, 1), (10, 2), (20, 4), (40, 8)]:
+        sagin = build_default_sagin(n_devices=n_dev, n_air=n_air, seed=0)
+        us = timeit(lambda: optimize_offloading(sagin), n=3)
+        times[(n_dev, n_air)] = us
+        row(f"complexity_K{n_dev}_N{n_air}", us,
+            f"per_device_us={us / n_dev:.0f}")
+    # near-linear: 8x nodes should cost < 32x time (log factors allowed)
+    ratio = times[(40, 8)] / times[(5, 1)]
+    row("complexity_scaling", 0.0, f"t(40)/t(5)={ratio:.1f};subquadratic="
+        f"{ratio < 32}")
+
+
+if __name__ == "__main__":
+    main()

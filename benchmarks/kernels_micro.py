@@ -1,0 +1,50 @@
+"""Micro-benchmarks of the jitted kernel wrappers (CPU oracle path; the
+Pallas TPU path is compile-validated in interpret mode by the test suite).
+Derived column reports achieved GB/s or GFLOP/s on this host."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fedavg_agg import ops as agg_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.wkv6 import ops as wkv_ops
+
+from .common import row, timeit
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # fedavg_agg: 8 clients x 4M params
+    x = jnp.asarray(rng.normal(size=(8, 4_000_000)).astype(np.float32))
+    w = jnp.ones((8,), jnp.float32) / 8
+
+    agg = jax.jit(agg_ops.weighted_aggregate)
+    agg(x, w).block_until_ready()
+    us = timeit(lambda: agg(x, w).block_until_ready(), n=5)
+    gbs = x.nbytes / (us * 1e-6) / 1e9
+    row("kernel_fedavg_agg_8x4M", us, f"GB/s={gbs:.1f}")
+
+    # flash attention (blocked path), B1 H4 S4096 D64
+    q = jnp.asarray(rng.normal(size=(1, 4, 4096, 64)).astype(np.float32))
+    fa = jax.jit(lambda q: fa_ops.attention(q, q, q))
+    fa(q).block_until_ready()
+    us = timeit(lambda: fa(q).block_until_ready(), n=3)
+    flops = 4 * 4 * 4096 * 4096 * 64 / 2  # causal
+    row("kernel_flash_attn_s4096", us, f"GFLOP/s={flops/(us*1e-6)/1e9:.1f}")
+
+    # wkv6: B1 H8 T1024 D64
+    r, k, v = (jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(
+        np.float32)) for _ in range(3))
+    wdec = jnp.asarray(rng.uniform(0.9, 0.999, size=(1, 8, 1024, 64)).astype(
+        np.float32))
+    u = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    wkv = jax.jit(wkv_ops.wkv)
+    wkv(r, k, v, wdec, u).block_until_ready()
+    us = timeit(lambda: wkv(r, k, v, wdec, u).block_until_ready(), n=3)
+    row("kernel_wkv6_t1024", us, f"tokens/s={1024/(us*1e-6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

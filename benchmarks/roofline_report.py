@@ -1,0 +1,68 @@
+"""Aggregates the dry-run JSON records into the EXPERIMENTS.md roofline
+table. Reads experiments/dryrun/*.json (produced by repro.launch.dryrun);
+prints CSV rows and, with --markdown, the §Roofline table."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import row
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(markdown: bool = False):
+    recs = load()
+    if not recs:
+        row("roofline_report", 0.0, "no dry-run records yet")
+        return
+    lines = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append((r["arch"], r["shape"], r["mesh"], "skipped",
+                          r.get("reason", "")))
+            continue
+        if r.get("status") != "ok":
+            lines.append((r["arch"], r["shape"], r["mesh"], "ERROR", ""))
+            continue
+        rf = r["roofline"]
+        tag = "flstep" if r.get("fl_step") else ""
+        lines.append((
+            r["arch"], r["shape"], r["mesh"] + tag,
+            f"c={rf['t_compute_s']:.3g}s m={rf['t_memory_s']:.3g}s "
+            f"n={rf['t_collective_s']:.3g}s dom={rf['dominant']} "
+            f"useful={rf['useful_flops_ratio']:.2f}",
+            f"temp={r['memory'].get('temp_bytes', 0) / 1e9:.1f}GB"))
+    if markdown:
+        print("| arch | shape | mesh | compute s | memory s | collective s"
+              " | dominant | useful | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            if r.get("status") != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                      + (f"skipped: {r.get('reason','')} |" if r.get("status")
+                         == "skipped" else "ERROR |") * 1)
+                continue
+            rf = r["roofline"]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} | "
+                  f"{rf['t_collective_s']:.3g} | {rf['dominant']} | "
+                  f"{rf['useful_flops_ratio']:.2f} | "
+                  f"{r['memory'].get('temp_bytes', 0) / 1e9:.1f} |")
+        return
+    for arch, shape, mesh, status, extra in lines:
+        row(f"roofline_{arch}_{shape}_{mesh}", 0.0, f"{status};{extra}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    main(**vars(ap.parse_args()))

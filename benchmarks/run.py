@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_FULL=1 for the
+paper-scale settings (50 devices, full datasets, 30 rounds).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (complexity, convergence_bound, fig4_time_to_accuracy,
+                   fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
+                   fl_payload_scaling, handover_dynamics, kernels_micro,
+                   roofline_report)
+    modules = [
+        ("fig5_compute_ablation", fig5_compute_ablation),
+        ("handover_dynamics", handover_dynamics),
+        ("fl_payload_scaling", fl_payload_scaling),
+        ("complexity", complexity),
+        ("convergence_bound", convergence_bound),
+        ("kernels_micro", kernels_micro),
+        ("fig4_time_to_accuracy", fig4_time_to_accuracy),
+        ("fig6_alpha_sweep", fig6_alpha_sweep),
+        ("fig7_pathloss", fig7_pathloss),
+        ("roofline_report", roofline_report),
+    ]
+    failures = []
+    for name, mod in modules:
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

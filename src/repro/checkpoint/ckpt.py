@@ -1,0 +1,69 @@
+"""Pytree checkpointing (npz-based; no external deps).
+
+Also provides ``handover_state``: the serialized blob a satellite transmits
+to its successor (model + optimizer state + remaining-data manifest), whose
+byte size feeds the handover-delay model (eq. 7).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, path: str) -> int:
+    """Save a pytree to ``path`` (npz + structure json). Returns bytes."""
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+    with open(path + ".tree", "w") as f:
+        f.write(str(treedef))
+    return os.path.getsize(path if path.endswith(".npz") else path + ".npz")
+
+
+def load_pytree(template, path: str):
+    """Load into the structure of ``template`` (keys must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_t = _flatten_with_paths(template)
+    assert set(flat_t) == set(data.files), "checkpoint structure mismatch"
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    new_leaves = []
+    for (path_elems, leaf) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        arr = data[key]
+        new_leaves.append(np.asarray(arr, dtype=np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def handover_state(params, opt_state, data_manifest: Dict[str, Any]
+                   ) -> Tuple[bytes, float]:
+    """Serialize the satellite handover blob; returns (blob, bits).
+
+    The bit count is what enters eq. (7) as Q(w) (+ manifest overhead);
+    the data samples themselves are counted separately via q|D_S|.
+    """
+    buf = io.BytesIO()
+    flat = _flatten_with_paths({"params": params, "opt": opt_state})
+    np.savez(buf, **flat)
+    manifest = json.dumps(data_manifest).encode()
+    blob = manifest + b"\x00" + buf.getvalue()
+    return blob, 8.0 * len(blob)

@@ -1,0 +1,6 @@
+from .base import ModelConfig
+from .registry import ARCH_IDS, REGISTRY, get_config
+from .shapes import SHAPES, InputShape, cache_specs, input_specs, supports
+
+__all__ = ["ModelConfig", "ARCH_IDS", "REGISTRY", "get_config", "SHAPES",
+           "InputShape", "cache_specs", "input_specs", "supports"]

@@ -1,0 +1,76 @@
+"""Assigned input shapes and ShapeDtypeStruct input_specs for the dry-run.
+
+  train_4k     seq=4096    global_batch=256   (training)      -> train_step
+  prefill_32k  seq=32768   global_batch=32    (prefill)       -> prefill
+  decode_32k   seq=32768   global_batch=128   (decode)        -> serve_step
+  long_500k    seq=524288  global_batch=1     (long decode)   -> serve_step
+
+Decode shapes lower ``serve_step`` (ONE token, cache of seq_len).
+long_500k requires a sub-quadratic attention path (SSM / hybrid / MLA
+latent cache / sliding window) — ``supports()`` encodes the policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train|prefill|decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Policy for which (arch x shape) combos are built (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return cfg.is_subquadratic
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                batch_override: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    f = jnp.dtype(cfg.param_dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), f)
+        out = {"inputs": inputs}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return out
+    # decode: ONE new token; the cache spec is created separately
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), f)
+    return {"inputs": inputs}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape,
+                batch_override: Optional[int] = None):
+    """ShapeDtypeStruct pytree matching transformer.init_cache."""
+    from repro.models import transformer as T
+    b = batch_override or shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, shape.seq_len))
+    return cache_shape

@@ -1,0 +1,89 @@
+"""Intra-layer data/model handover at the space layer (Section III-C).
+
+Implements the seamless-handover schedule of eqs. (8)-(12): the current
+satellite trains on D_S until its coverage window over the target region
+ends; if unfinished it transmits the model + the dataset to the next
+incoming satellite over the ISL (handover delay eq. 7), which resumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from . import latency as lat
+from .network import SAGIN
+
+
+@dataclasses.dataclass
+class HandoverLeg:
+    sat_index: int
+    start_time: float            # when this satellite starts processing
+    handover_delay: float        # ISL delay paid to *reach* this satellite
+    samples_processed: float
+    end_time: float              # when it stops (done or coverage end)
+
+
+@dataclasses.dataclass
+class SpaceSchedule:
+    legs: List[HandoverLeg]
+    total_latency: float
+    completed: bool
+
+    @property
+    def n_handovers(self) -> int:
+        return max(0, len(self.legs) - 1)
+
+
+def space_schedule(n_samples: float, sagin: SAGIN) -> SpaceSchedule:
+    """Compute the space-layer schedule for processing ``n_samples``.
+
+    Faithful to eqs. (8)-(12): satellite i becomes active at
+    T_{i-1} + tau^hand_{i-1,i}; it can process (f_i/m_i) * available_time
+    samples before its own coverage end T_i. Returns the full schedule and
+    tau_S^{(r)} (eq. 10).
+    """
+    legs: List[HandoverLeg] = []
+    if n_samples <= 0:
+        return SpaceSchedule(legs=[], total_latency=0.0, completed=True)
+
+    remaining = float(n_samples)
+    t = 0.0  # current wall-clock within the round
+    for i, sat in enumerate(sagin.satellites):
+        hand = 0.0
+        if i > 0:
+            # handover pays for the model + the *entire remaining* dataset
+            # (the paper hands over D_S^{(r+1)}; eq. 7 uses |D_S^{(r+1)}|,
+            # we use the unprocessed remainder which is what must move).
+            hand = lat.handover_delay(sagin.model_bits, sagin.q_bits,
+                                      remaining, sagin.z_isl)
+            t = t + hand
+        start = t
+        finish_time = lat.comp_time(sat.m, remaining, sat.f)
+        if start + finish_time <= sat.coverage_end:
+            legs.append(HandoverLeg(sat.index, start, hand, remaining,
+                                    start + finish_time))
+            return SpaceSchedule(legs=legs, total_latency=start + finish_time,
+                                 completed=True)
+        # partial processing until coverage end
+        avail = max(0.0, sat.coverage_end - start)
+        done = (sat.f / sat.m) * avail
+        done = min(done, remaining)
+        legs.append(HandoverLeg(sat.index, start, hand, done,
+                                sat.coverage_end))
+        remaining -= done
+        t = sat.coverage_end
+    # Ran out of known incoming satellites: extrapolate with the last
+    # satellite's parameters (an unbounded-coverage virtual satellite), so
+    # the optimizer always sees a finite, monotone latency.
+    last = sagin.satellites[-1]
+    hand = lat.handover_delay(sagin.model_bits, sagin.q_bits, remaining,
+                              sagin.z_isl)
+    t += hand
+    finish = lat.comp_time(last.m, remaining, last.f)
+    legs.append(HandoverLeg(-1, t, hand, remaining, t + finish))
+    return SpaceSchedule(legs=legs, total_latency=t + finish, completed=True)
+
+
+def space_latency(n_samples: float, sagin: SAGIN) -> float:
+    """tau_S^{(r)} (eq. 10) as a scalar."""
+    return space_schedule(n_samples, sagin).total_latency

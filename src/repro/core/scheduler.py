@@ -1,0 +1,235 @@
+"""Per-round orchestration: ties constellation, offloading and handover
+together (Section III overview; Remark 1 gateway role)."""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from . import network as net
+from .constellation import WalkerStar, access_intervals, serving_sequence
+from .handover import SpaceSchedule, space_schedule
+from .network import SAGIN, Satellite
+from .offloading import OffloadPlan, optimize_offloading
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_index: int
+    plan: OffloadPlan
+    schedule: SpaceSchedule
+    latency: float                 # realized round latency (eq. 18)
+    wall_clock_start: float        # cumulative time when round started
+    ground_sizes: List[int]
+    air_sizes: List[int]
+    sat_size: int
+
+
+class SAGINOrchestrator:
+    """Simulates the full multi-round FL orchestration of the paper.
+
+    Each round: (1) refresh the serving-satellite chain from the
+    constellation at the current wall-clock; (2) run the adaptive offloading
+    optimizer; (3) apply the plan (moving integer sample counts with
+    conservation repair); (4) advance the wall clock by the realized
+    latency. Strategy hooks let the baselines reuse the same machinery.
+    """
+
+    def __init__(self, sagin: SAGIN,
+                 constellation: Optional[WalkerStar] = None,
+                 lat_deg: float = 40.0, lon_deg: float = -86.0,
+                 sat_f_seed: int = 0, horizon: float = 48 * 3600.0,
+                 strategy: str = "adaptive"):
+        self.sagin = sagin
+        self.constellation = constellation
+        self.strategy = strategy
+        self._static_plan: Optional[OffloadPlan] = None
+        self._rng = np.random.default_rng(sat_f_seed)
+        self.wall_clock = 0.0
+        self.records: List[RoundRecord] = []
+        if constellation is not None:
+            self._intervals = access_intervals(constellation, lat_deg,
+                                               lon_deg, t_end=horizon)
+        else:
+            self._intervals = None
+
+    # -- satellite chain ----------------------------------------------------
+    def _refresh_satellites(self):
+        if self._intervals is None:
+            return  # static satellite list supplied by the user
+        chain = serving_sequence(self._intervals, self.wall_clock)
+        sats = []
+        for i, iv in enumerate(chain):
+            f = float(self._rng.uniform(*net.F_SAT_RANGE))
+            sats.append(Satellite(index=iv.sat, f=f,
+                                  coverage_end=max(0.0,
+                                                   iv.end - self.wall_clock)))
+        if not sats:
+            sats = [Satellite(index=-1,
+                              f=float(self._rng.uniform(*net.F_SAT_RANGE)),
+                              coverage_end=np.inf)]
+        self.sagin.satellites = sats
+
+    # -- strategies ---------------------------------------------------------
+    def _plan_round(self, r: int) -> OffloadPlan:
+        from .offloading import ClusterPlan
+        from .handover import space_latency
+        from . import latency as lat
+        sagin = self.sagin
+        if self.strategy == "adaptive":
+            return optimize_offloading(sagin)
+        if self.strategy == "static":
+            if self._static_plan is None:
+                self._static_plan = optimize_offloading(sagin)
+            if r == 0:
+                return self._static_plan
+            # keep datasets fixed: no further transfers
+            return self._null_plan()
+        if self.strategy == "none":
+            return self._null_plan()
+        if self.strategy == "air_ground":
+            # zero-out space transfers: per-cluster balancing only
+            from .offloading import cluster_case1
+            clusters = [cluster_case1(sagin, n, 0.0) for n in sagin.clusters]
+            plan = OffloadPlan(case=1, clusters=clusters,
+                               new_sat_samples=sagin.n_sat_samples,
+                               space_latency=space_latency(
+                                   sagin.n_sat_samples, sagin),
+                               round_latency=0.0, baseline_latency=0.0)
+            from .offloading import evaluate_plan
+            plan.round_latency = evaluate_plan(sagin, plan)
+            return plan
+        if self.strategy == "ground_space":
+            # bypass air compute: use full optimizer but forbid air nodes
+            # from keeping samples (they only relay). Implemented by
+            # temporarily zeroing air compute attractiveness.
+            saved = [a.f for a in sagin.air_nodes]
+            for a in sagin.air_nodes:
+                a.f = 1.0  # effectively no compute at air layer
+            try:
+                plan = optimize_offloading(sagin)
+            finally:
+                for a, f in zip(sagin.air_nodes, saved):
+                    a.f = f
+            return plan
+        if self.strategy == "proportional":
+            return self._proportional_plan()
+        raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    def _null_plan(self) -> OffloadPlan:
+        from .offloading import ClusterPlan, evaluate_plan
+        from .handover import space_latency
+        from . import latency as lat
+        sagin = self.sagin
+        clusters = [ClusterPlan(n=n) for n in sagin.clusters]
+        plan = OffloadPlan(case=0, clusters=clusters,
+                           new_sat_samples=sagin.n_sat_samples,
+                           space_latency=space_latency(sagin.n_sat_samples,
+                                                       sagin),
+                           round_latency=0.0, baseline_latency=0.0)
+        for cp in plan.clusters:
+            cp.latency = (lat.air_cluster_latency_no_offload(sagin, cp.n)
+                          + lat.model_upload_time(sagin.model_bits,
+                                                  sagin.a2s_rate(cp.n)))
+        plan.round_latency = evaluate_plan(sagin, plan)
+        return plan
+
+    def _proportional_plan(self) -> OffloadPlan:
+        """Baseline: allocation proportional to each node's compute power."""
+        from .offloading import ClusterPlan, evaluate_plan
+        from .handover import space_latency
+        sagin = self.sagin
+        f_sat = sagin.satellites[0].f
+        f_total = (sum(d.f for d in sagin.devices)
+                   + sum(a.f for a in sagin.air_nodes) + f_sat)
+        total = sagin.total_samples
+        # target sizes
+        tgt_sat = total * f_sat / f_total
+        clusters = []
+        sat_delta = tgt_sat - sagin.n_sat_samples
+        # distribute the satellite delta across clusters proportionally to
+        # their offloadable mass; within each cluster move between air/ground
+        offloadable = {n: sum(sagin.devices[k].n_offloadable
+                              for k in sagin.clusters[n])
+                       + sagin.air_nodes[n].n_samples
+                       for n in sagin.clusters}
+        off_total = max(1.0, sum(offloadable.values()))
+        for n in sagin.clusters:
+            cp = ClusterPlan(n=n)
+            air = sagin.air_nodes[n]
+            ks = sagin.clusters[n]
+            if sat_delta > 0:  # clusters send up
+                share = sat_delta * offloadable[n] / off_total
+                cp.d_air_space = min(share, offloadable[n])
+                # take from devices proportionally to their offloadable data
+                need = max(0.0, cp.d_air_space - air.n_samples)
+                dev_off = max(1.0, sum(sagin.devices[k].n_offloadable
+                                       for k in ks))
+                for k in ks:
+                    cp.d_ground_air[k] = (need * sagin.devices[k].n_offloadable
+                                          / dev_off)
+            else:  # satellite sends down
+                share = -sat_delta / len(sagin.clusters)
+                cp.d_space_air = share
+            # air target: proportional within cluster
+            f_cluster = air.f + sum(sagin.devices[k].f for k in ks)
+            clusters.append(cp)
+        plan = OffloadPlan(case=2 if sat_delta > 0 else 1, clusters=clusters,
+                           new_sat_samples=sagin.n_sat_samples + sum(
+                               c.d_air_space - c.d_space_air
+                               for c in clusters),
+                           space_latency=0.0, round_latency=0.0,
+                           baseline_latency=0.0)
+        plan.space_latency = space_latency(plan.new_sat_samples, sagin)
+        for cp in plan.clusters:
+            from .offloading import evaluate_cluster
+            from . import latency as lat
+            cp.latency = evaluate_cluster(sagin, cp) + lat.model_upload_time(
+                sagin.model_bits, sagin.a2s_rate(cp.n))
+        plan.round_latency = evaluate_plan(sagin, plan)
+        return plan
+
+    # -- application --------------------------------------------------------
+    def _apply_plan(self, plan: OffloadPlan):
+        sagin = self.sagin
+        g, a, s = plan.new_sizes(sagin)
+        # integer rounding with conservation repair
+        total_before = sagin.total_samples
+        g = [int(round(x)) for x in g]
+        a = [int(round(x)) for x in a]
+        s = int(round(s))
+        drift = total_before - (sum(g) + sum(a) + s)
+        s += drift
+        if s < 0:
+            a[0] += s
+            s = 0
+        for k, dev in enumerate(sagin.devices):
+            moved_away = dev.n_samples - g[k]
+            dev.n_samples = max(dev.n_sensitive, g[k])
+        for n, air in enumerate(sagin.air_nodes):
+            air.n_samples = max(0, a[n])
+        sagin.n_sat_samples = max(0, s)
+
+    # -- main loop ----------------------------------------------------------
+    def step(self, r: int) -> RoundRecord:
+        self._refresh_satellites()
+        plan = self._plan_round(r)
+        schedule = space_schedule(plan.new_sat_samples, self.sagin)
+        rec = RoundRecord(
+            round_index=r, plan=plan, schedule=schedule,
+            latency=plan.round_latency, wall_clock_start=self.wall_clock,
+            ground_sizes=[d.n_samples for d in self.sagin.devices],
+            air_sizes=[a.n_samples for a in self.sagin.air_nodes],
+            sat_size=self.sagin.n_sat_samples)
+        self._apply_plan(plan)
+        rec.ground_sizes = [d.n_samples for d in self.sagin.devices]
+        rec.air_sizes = [a.n_samples for a in self.sagin.air_nodes]
+        rec.sat_size = self.sagin.n_sat_samples
+        self.wall_clock += plan.round_latency
+        self.records.append(rec)
+        return rec
+
+    def run(self, n_rounds: int) -> List[RoundRecord]:
+        return [self.step(r) for r in range(n_rounds)]

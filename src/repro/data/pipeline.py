@@ -1,0 +1,56 @@
+"""Host-side batching pipeline for FL training and the big-model trainer."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+class BatchIterator:
+    """Infinite shuffled mini-batch iterator over an index pool."""
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, indices: np.ndarray,
+                 batch_size: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.indices = np.asarray(indices)
+        self.batch_size = max(1, int(batch_size))
+        self._rng = np.random.default_rng(seed)
+        self._order = self._rng.permutation(len(self.indices))
+        self._pos = 0
+
+    def __iter__(self) -> "BatchIterator":
+        return self
+
+    def __next__(self) -> Tuple[np.ndarray, np.ndarray]:
+        if len(self.indices) == 0:
+            raise StopIteration
+        if self._pos + self.batch_size > len(self._order):
+            self._order = self._rng.permutation(len(self.indices))
+            self._pos = 0
+        sel = self.indices[self._order[self._pos:self._pos + self.batch_size]]
+        self._pos += self.batch_size
+        return self.x[sel], self.y[sel]
+
+
+def batch_for_local_steps(x: np.ndarray, y: np.ndarray, indices: np.ndarray,
+                          n_steps: int, rng: np.random.Generator,
+                          max_batch: int = 64):
+    """Split a node's pool into H mini-batches (paper: |D|/H per batch at the
+    satellite; capped for memory on ground devices). Returns stacked arrays
+    of shape (H, B, ...) padded by resampling when the pool is small."""
+    indices = np.asarray(indices)
+    if len(indices) == 0:
+        return None
+    b = int(np.ceil(len(indices) / n_steps))
+    # paper: satellite batch = |D|/H. Cap for CPU memory, but let big pools
+    # (air/satellite after offloading) use proportionally bigger batches so
+    # their lambda-weighted gradients are not noise-dominated.
+    eff_cap = int(np.clip(max(max_batch, len(indices) // (4 * n_steps)),
+                          max_batch, 8 * max_batch))
+    b = int(np.clip(b, 1, eff_cap))
+    order = rng.permutation(indices)
+    need = n_steps * b
+    reps = int(np.ceil(need / len(order)))
+    pool = np.concatenate([rng.permutation(indices) for _ in range(reps)])
+    sel = pool[:need].reshape(n_steps, b)
+    return x[sel], y[sel]

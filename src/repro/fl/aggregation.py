@@ -1,0 +1,67 @@
+"""Hierarchical model aggregation (eq. 13).
+
+Three implementations of the same weighted average:
+
+1. ``fedavg``            — host-side pytree einsum over a client list.
+2. ``fedavg_stacked``    — jitted over stacked client params; dispatches to
+                           the Pallas ``fedavg_agg`` kernel on TPU.
+3. ``hierarchical_psum`` — the mesh-native version used by the multi-pod
+                           runner: lambda-weighted psum over the ``data``
+                           axis (air-level aggregation) then the ``pod``
+                           axis (space-level aggregation), inside shard_map.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(params_list: List, weights: Sequence[float]):
+    """eq. (13) over a python list of client pytrees."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def combine(*leaves):
+        stacked = jnp.stack(leaves)
+        return jnp.tensordot(w, stacked, axes=1).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(combine, *params_list)
+
+
+@jax.jit
+def fedavg_stacked(stacked_params, weights):
+    """eq. (13) over stacked params (leading client axis C).
+
+    Uses the fused Pallas aggregation kernel on TPU, jnp elsewhere.
+    """
+    from repro.kernels.fedavg_agg import ops as agg_ops
+    w = weights / jnp.sum(weights)
+    return jax.tree_util.tree_map(
+        lambda leaf: agg_ops.weighted_aggregate(leaf, w), stacked_params)
+
+
+def hierarchical_weighted_psum(local_params, lam, axis_names):
+    """Mesh-native eq. (13): weighted sum over one or more mesh axes.
+
+    Call inside ``shard_map``. ``lam`` is this shard's aggregation weight
+    (its data portion); weights must sum to 1 across the axes.
+    """
+    def agg(leaf):
+        contrib = (lam * leaf.astype(jnp.float32))
+        for ax in axis_names:
+            contrib = jax.lax.psum(contrib, ax)
+        return contrib.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(agg, local_params)
+
+
+def aggregation_weights(ground_sizes: Sequence[int],
+                        air_sizes: Sequence[int],
+                        sat_size: int) -> jnp.ndarray:
+    """lambda weights of eq. (13): portions of the *global* dataset."""
+    sizes = jnp.asarray(list(ground_sizes) + list(air_sizes) + [sat_size],
+                        jnp.float32)
+    return sizes / jnp.sum(sizes)

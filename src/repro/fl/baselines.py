@@ -1,0 +1,13 @@
+"""The paper's comparison schemes (Section VI-A), as strategy names for the
+orchestrator/runner. Each maps to a data-placement policy; model aggregation
+is FedAvg (eq. 13) in every scheme, as in the paper.
+
+- ``none``         : no data offloading (space/air only aggregate).
+- ``air_ground``   : offloading only between air and ground layers.
+- ``ground_space`` : offloading only between ground and space (air relays).
+- ``static``       : adaptive optimization at round 0 only, then frozen.
+- ``proportional`` : samples proportional to each node's compute power.
+- ``adaptive``     : the proposed method.
+"""
+BASELINES = ["none", "air_ground", "ground_space", "static", "proportional"]
+ALL_SCHEMES = BASELINES + ["adaptive"]

@@ -1,0 +1,66 @@
+"""Per-node local training (eqs. 3-4, 6): H mini-batch SGD iterations.
+
+``local_update`` is a jitted lax.scan over H steps; ``vmapped_local_update``
+runs a stacked batch of clients at once (used by the mesh FL runner, where
+the client axis is sharded over the device mesh).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None],
+                                         axis=-1))
+
+
+def make_loss_fn(apply_fn: Callable):
+    def loss_fn(params, x, y):
+        return cross_entropy(apply_fn(params, x), y)
+    return loss_fn
+
+
+@partial(jax.jit, static_argnums=(0,))
+def local_update(apply_fn: Callable, params, xs, ys, lr):
+    """H local SGD iterations (eq. 3/4/6).
+
+    xs: (H, B, ...), ys: (H, B). Returns (new_params, mean_loss).
+    """
+    loss_fn = make_loss_fn(apply_fn)
+
+    def step(p, batch):
+        x, y = batch
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        return p, loss
+
+    new_params, losses = jax.lax.scan(step, params, (xs, ys))
+    return new_params, jnp.mean(losses)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def vmapped_local_update(apply_fn: Callable, stacked_params, xs, ys, lrs):
+    """Run many clients at once.
+
+    stacked_params: pytree with leading client axis C.
+    xs: (C, H, B, ...), ys: (C, H, B), lrs: (C,).
+    """
+    def one(params, x, y, lr):
+        return local_update(apply_fn, params, x, y, lr)
+
+    return jax.vmap(one)(stacked_params, xs, ys, lrs)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def evaluate(apply_fn: Callable, params, x, y) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Returns (loss, accuracy) over a single large batch."""
+    logits = apply_fn(params, x)
+    loss = cross_entropy(logits, y)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc

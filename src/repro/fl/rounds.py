@@ -1,0 +1,187 @@
+"""End-to-end FL simulation driver (Section VI).
+
+Couples the analytic SAGIN orchestration (latency, offloading, handover)
+with *real* federated training on a (synthetic) dataset: every node that
+holds samples runs H local SGD iterations, models are aggregated with the
+eq.-(13) lambda weights, and the wall clock advances by the optimized round
+latency. Produces accuracy-versus-training-time curves (Figs. 4, 6, 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SAGINOrchestrator, build_default_sagin
+from repro.core.network import SAGIN
+from repro.data import Dataset, FederatedPools, make_dataset, partition
+from repro.models.cnn import build_model, model_bits
+
+from .aggregation import fedavg
+from .client import evaluate, local_update
+
+
+@dataclasses.dataclass
+class FLConfig:
+    dataset: str = "mnist"
+    iid: bool = True
+    alpha: float = 0.8
+    n_devices: int = 50
+    n_air: int = 5
+    n_rounds: int = 30
+    h_local: int = 5
+    lr: float = 0.05
+    batch_cap: int = 32
+    strategy: str = "adaptive"     # adaptive|none|air_ground|ground_space|static|proportional
+    rayleigh: bool = True
+    train_fraction: float = 0.05   # shrink dataset for CPU-speed runs
+    eval_size: int = 1024
+    seed: int = 0
+    use_constellation: bool = False  # True: drive T_i from Walker-Star
+
+
+@dataclasses.dataclass
+class FLResult:
+    config: FLConfig
+    times: List[float]             # cumulative training time (s)
+    accuracies: List[float]
+    losses: List[float]
+    latencies: List[float]
+    cases: List[int]
+    layer_portions: List[Dict[str, float]]  # data share per layer per round
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for t, a in zip(self.times, self.accuracies):
+            if a >= target:
+                return t
+        return None
+
+
+def _train_node(apply_fn, params, ds, idx, h, lr, batch_cap, rng):
+    from repro.data.pipeline import batch_for_local_steps
+    batches = batch_for_local_steps(ds.x_train, ds.y_train, idx, h, rng,
+                                    max_batch=batch_cap)
+    if batches is None:
+        return None
+    xs, ys = batches
+    new_params, loss = local_update(apply_fn, params, jnp.asarray(xs),
+                                    jnp.asarray(ys), lr)
+    return new_params, float(loss)
+
+
+def run_fl(cfg: FLConfig) -> FLResult:
+    rng = np.random.default_rng(cfg.seed)
+    ds = make_dataset(cfg.dataset, seed=cfg.seed,
+                      train_fraction=cfg.train_fraction)
+    parts = partition(ds, n_devices=cfg.n_devices, iid=cfg.iid,
+                      alpha=cfg.alpha, seed=cfg.seed)
+    pools = FederatedPools.from_partitions(parts, cfg.n_air)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params, apply_fn = build_model(ds.name, key,
+                                   image_shape=ds.x_train.shape[1:])
+    q_bits = ds.sample_bits
+    sagin = build_default_sagin(
+        n_devices=cfg.n_devices, n_air=cfg.n_air, alpha=cfg.alpha,
+        q_bits=q_bits, model_bits=model_bits(params),
+        rayleigh=cfg.rayleigh, seed=cfg.seed)
+    # sync actual per-device sizes into the network model
+    for k, p in enumerate(parts):
+        sagin.devices[k].n_samples = p.n_samples
+        sagin.devices[k].n_sensitive = p.n_sensitive
+
+    constellation = None
+    if cfg.use_constellation:
+        from repro.core import WalkerStar
+        constellation = WalkerStar()
+    orch = SAGINOrchestrator(sagin, constellation=constellation,
+                             sat_f_seed=cfg.seed, strategy=cfg.strategy)
+
+    result = FLResult(cfg, [], [], [], [], [], [])
+    eval_idx = rng.choice(len(ds.x_test),
+                          size=min(cfg.eval_size, len(ds.x_test)),
+                          replace=False)
+    x_eval = jnp.asarray(ds.x_test[eval_idx])
+    y_eval = jnp.asarray(ds.y_test[eval_idx])
+
+    for r in range(cfg.n_rounds):
+        rec = orch.step(r)
+        _apply_plan_to_pools(rec.plan, pools, sagin)
+        _sync_sizes(pools, sagin)
+
+        # ---- local training at every node that holds data ----------------
+        new_models, weights, losses = [], [], []
+        total = pools.total()
+        for k in range(cfg.n_devices):
+            idx = pools.ground_all(k)
+            if len(idx) == 0:
+                continue
+            out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
+                              cfg.lr, cfg.batch_cap, rng)
+            if out is not None:
+                new_models.append(out[0])
+                weights.append(len(idx) / total)
+                losses.append(out[1])
+        for n in range(cfg.n_air):
+            idx = pools.air[n]
+            if len(idx) == 0:
+                continue
+            out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
+                              cfg.lr, cfg.batch_cap, rng)
+            if out is not None:
+                new_models.append(out[0])
+                weights.append(len(idx) / total)
+                losses.append(out[1])
+        if len(pools.sat) > 0:
+            out = _train_node(apply_fn, params, ds, pools.sat, cfg.h_local,
+                              cfg.lr, cfg.batch_cap, rng)
+            if out is not None:
+                new_models.append(out[0])
+                weights.append(len(pools.sat) / total)
+                losses.append(out[1])
+
+        if new_models:
+            params = fedavg(new_models, weights)
+
+        loss, acc = evaluate(apply_fn, params, x_eval, y_eval)
+        result.times.append(orch.wall_clock)
+        result.accuracies.append(float(acc))
+        result.losses.append(float(np.mean(losses)) if losses else float(loss))
+        result.latencies.append(rec.latency)
+        result.cases.append(rec.plan.case)
+        n_ground = sum(len(pools.ground_all(k)) for k in range(cfg.n_devices))
+        n_air = sum(len(a) for a in pools.air)
+        result.layer_portions.append({
+            "ground": n_ground / total, "air": n_air / total,
+            "space": len(pools.sat) / total})
+    return result
+
+
+def _apply_plan_to_pools(plan, pools: FederatedPools, sagin: SAGIN):
+    """Mirror the optimizer's (fractional) plan as integer index moves."""
+    for cp in plan.clusters:
+        n = cp.n
+        # downward: satellite -> air -> ground
+        if cp.d_space_air > 0:
+            pools.move_sat_to_air(n, int(round(cp.d_space_air)))
+        for k, d in sorted(cp.d_air_ground.items()):
+            pools.move_air_to_ground(n, k, int(round(d)))
+        # upward: ground -> air -> satellite
+        for k, d in sorted(cp.d_ground_air.items()):
+            pools.move_ground_to_air(k, n, int(round(d)))
+        if cp.d_air_space > 0:
+            pools.move_air_to_sat(n, int(round(cp.d_air_space)))
+
+
+def _sync_sizes(pools: FederatedPools, sagin: SAGIN):
+    """Make the analytic model's sizes match the realized pools."""
+    for k, dev in enumerate(sagin.devices):
+        dev.n_samples = len(pools.ground_all(k))
+        dev.n_sensitive = len(pools.ground_sensitive[k])
+    for n, air in enumerate(sagin.air_nodes):
+        air.n_samples = len(pools.air[n])
+    sagin.n_sat_samples = len(pools.sat)

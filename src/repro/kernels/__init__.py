@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three modules:
+  kernel.py — the pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit-friendly wrapper: dispatches to the kernel on TPU,
+              to the pure-jnp oracle elsewhere (incl. the CPU dry-run)
+  ref.py    — the pure-jnp oracle used for interpret-mode validation
+
+Kernels: fedavg_agg (eq. 13 weighted aggregation), flash_attention
+(causal/sliding-window GQA attention), wkv6 (RWKV6 recurrence).
+"""

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused lambda-weighted multi-client aggregation.
+
+eq. (13) is a pure HBM-bandwidth operation executed over every parameter
+each round: out[p] = sum_c w[c] * x[c, p]. The kernel streams 128x128-
+aligned VMEM tiles of the flattened parameter axis and keeps the client
+axis resident in VREGs, so each parameter byte is read exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384  # flattened f32 elements per tile (64 KiB VMEM per operand row)
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    # x_ref: (C, BLOCK) VMEM tile; w_ref: (C, 1); o_ref: (1, BLOCK)
+    w = w_ref[...].astype(jnp.float32)            # (C, 1)
+    x = x_ref[...].astype(jnp.float32)            # (C, BLOCK)
+    o_ref[...] = jnp.sum(w * x, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_aggregate(stacked: jnp.ndarray, weights: jnp.ndarray,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Pallas path: stacked (C, ...) -> (...,) weighted sum over clients."""
+    c = stacked.shape[0]
+    out_shape = stacked.shape[1:]
+    flat = stacked.reshape(c, -1)
+    p = flat.shape[1]
+    pad = (-p) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    n_blocks = flat.shape[1] // BLOCK
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, flat.shape[1]), stacked.dtype),
+        interpret=interpret,
+    )(w2, flat)
+    out = out.reshape(-1)
+    if pad:
+        out = out[:p]
+    return out.reshape(out_shape)

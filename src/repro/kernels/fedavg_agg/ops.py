@@ -1,0 +1,19 @@
+"""Dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def weighted_aggregate(stacked: jnp.ndarray, weights: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """eq. (13): sum_c weights[c] * stacked[c] over the client axis."""
+    if _on_tpu():
+        return kernel.weighted_aggregate(stacked, weights)
+    return ref.weighted_aggregate(stacked, weights)

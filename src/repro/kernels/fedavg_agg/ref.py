@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused FedAvg aggregation (eq. 13)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_aggregate(stacked: jnp.ndarray, weights: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """out = sum_c weights[c] * stacked[c]; stacked: (C, ...), weights: (C,)."""
+    out = jnp.tensordot(weights.astype(jnp.float32),
+                        stacked.astype(jnp.float32), axes=1)
+    return out.astype(stacked.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal / sliding-window GQA flash attention.
+
+Grid (B, Hq, Sq/BQ, Skv/BK); the KV grid axis is innermost so the f32
+online-softmax accumulators (m, l, acc) live in VMEM scratch and persist
+across KV steps (TPU grids execute sequentially, last axis fastest). GQA is
+expressed in the KV BlockSpec index maps (q-head -> kv-head), so no KV
+replication ever reaches memory. Block shapes are MXU-aligned (128x128 by
+default); the working set per step is BQ*D + 2*BK*D + BQ*BK f32 ->
+~192 KiB at (128,128,128), well inside the ~16 MiB VMEM budget with room
+for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, n_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BK, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (BQ, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (BQ, BK)
+    # fully-masked rows would otherwise contribute exp(NEG_INF - NEG_INF)=1
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block size"
+    n_q, n_kv = s // bq, s // bk
+    scale = float(1.0 / (d ** 0.5))
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,26 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """Causal / sliding-window GQA attention.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D). On TPU this lowers to the
+    VMEM-tiled Pallas kernel; elsewhere (CPU dry-run/tests) to the oracle.
+    """
+    if jax.default_backend() == "tpu" and q.shape[2] % 128 == 0:
+        return kernel.flash_attention(q, k, v, causal=causal, window=window)
+    s = q.shape[2]
+    if s >= 4096 and s % 1024 == 0:
+        # flash-equivalent lowering path: no (S, S) score materialization
+        return ref.blocked_attention(q, k, v, causal=causal, window=window)
+    return ref.attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) GQA attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0.
+
+    Returns (B, Hq, S, D). ``window`` limits attention to the last
+    ``window`` positions (sliding-window attention).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (cols > rows - window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      block: int = 1024) -> jnp.ndarray:
+    """Flash-style blocked attention in pure jnp (lax.scan over KV blocks).
+
+    Numerically matches ``attention`` but never materializes the (S, S)
+    score matrix — this is the lowering path used on large sequences so the
+    compiled HLO has the same memory behaviour as the TPU Pallas kernel.
+    """
+    import jax
+
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    block = min(block, s)
+    assert s % block == 0
+    n_blocks = s // block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kb = k.reshape(b, hkv, n_blocks, block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, n_blocks, block, d).transpose(2, 0, 1, 3, 4)
+    rows = jnp.arange(s)[:, None]
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp
+        k_j = jnp.repeat(k_j.astype(jnp.float32), group, axis=1)
+        v_j = jnp.repeat(v_j.astype(jnp.float32), group, axis=1)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qf, k_j) * scale
+        cols = j * block + jnp.arange(block)[None, :]
+        mask = jnp.ones((s, block), bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hq, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, s), jnp.float32)
+    a0 = jnp.zeros((b, hq, s, d), jnp.float32)
+    # checkpoint the KV-block step: backward recomputes the (S, block)
+    # probability tensors instead of saving one per block
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (jnp.arange(n_blocks), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)

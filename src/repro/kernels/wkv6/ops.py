@@ -1,0 +1,29 @@
+"""Dispatching wrapper for the RWKV6 WKV recurrence.
+
+TPU       -> Pallas chunked-sequential kernel (VMEM-resident state).
+elsewhere -> chunked *parallel* form for long sequences (the lowering path
+             whose memory behaviour matches the kernel; EXPERIMENTS.md
+             §Perf "wkv-chunked-parallel"), per-step scan oracle for short
+             ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+CHUNK_THRESHOLD = 256
+
+
+def wkv(r, k, v, w, u) -> jnp.ndarray:
+    """RWKV6 recurrence; see module docstring for dispatch rules."""
+    t = r.shape[2]
+    if jax.default_backend() == "tpu" and t % kernel.DEFAULT_CHUNK == 0:
+        return kernel.wkv(r, k, v, w, u)
+    if t >= CHUNK_THRESHOLD and t % 64 == 0:
+        return ref.wkv_chunked(r, k, v, w, u, chunk=64)
+    return ref.wkv(r, k, v, w, u)
+
+
+wkv_step = ref.wkv_step  # decode path: single step, pure jnp everywhere

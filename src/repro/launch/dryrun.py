@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh using ShapeDtypeStruct stand-ins
+(no allocation), then extract the roofline terms from the compiled module.
+
+MUST be run as __main__ (or imported before any other jax-touching module)
+so the XLA_FLAGS above take effect before jax initializes its backends.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every combo, subprocesses
+  python -m repro.launch.dryrun --all --mesh multi
+Outputs JSON records under experiments/dryrun/.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+         "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+         "f8e5m2": 1, "s16": 2, "u16": 2}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\n]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum per-device result bytes of every collective op, by type."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline(cost, coll_bytes_per_dev, n_chips, cfg, shape, kind):
+    """The three roofline terms (seconds) + useful-FLOPs ratio."""
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    flops_per_dev = float(cost.get("flops", 0.0) or 0.0)
+    bytes_per_dev = float(cost.get("bytes accessed", 0.0) or 0.0)
+    t_compute = flops_per_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    # model flops: 6 N_active D for training, 2 N_active per generated token
+    n_act = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_act * tokens
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_act * tokens
+    else:
+        model_flops = 2.0 * n_act * shape.global_batch
+    hlo_total = flops_per_dev * n_chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": max(
+            [("compute", t_compute), ("memory", t_memory),
+             ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+    }
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            fsdp: bool = True, remat: bool = None,
+            fl_step: bool = False, fl_local: int = 1,
+            fl_agg_dtype: str = "float32",
+            pod_shard_params: bool = False) -> dict:
+    import dataclasses
+
+    from repro.configs import SHAPES, get_config, input_specs, supports
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.serve import abstract_cache, make_serve_step
+    from repro.launch.train import (abstract_params, make_fl_train_step,
+                                    make_prefill_step,
+                                    make_sharded_train_step)
+    from repro.sharding.activations import activation_sharding
+    from repro.sharding.specs import batch_axes as mesh_batch_axes
+
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "fsdp": fsdp, "fl_step": fl_step, "fl_local": fl_local,
+           "fl_agg_dtype": fl_agg_dtype, "status": "skipped"}
+    if not supports(cfg, shape):
+        rec["reason"] = "full-attention arch without sub-quadratic variant"
+        return rec
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+
+    # batch axes usable for activation constraints (respect divisibility)
+    baxes = mesh_batch_axes(multi_pod)
+    n_batch = int(np.prod([16 if a == "data" else 2 for a in baxes]))
+    if shape.global_batch % n_batch != 0:
+        baxes = ("data",) if shape.global_batch % 16 == 0 else ()
+    if fl_step:
+        # inside the manual-"pod" shard_map region constraints may only
+        # name auto axes
+        baxes = ("data",)
+
+    with mesh, activation_sharding(mesh, baxes):
+        if shape.kind == "train":
+            if fl_step:
+                step, rep_sh, batch_sh = make_fl_train_step(
+                    cfg, mesh, shape, h_local=fl_local,
+                    agg_dtype=fl_agg_dtype)
+                n_pod = mesh.devices.shape[0]
+                params_abs = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct((n_pod,) + x.shape,
+                                                   x.dtype),
+                    abstract_params(cfg))
+                batch_abs = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (n_pod, x.shape[0] // n_pod) + x.shape[1:], x.dtype),
+                    input_specs(cfg, shape))
+                lowered = step.lower(params_abs, batch_abs)
+            elif False:
+                pass
+            else:
+                step, (param_sh, batch_sh), _ = make_sharded_train_step(
+                    cfg, mesh, shape, fsdp=fsdp,
+                    pod_shard_params=pod_shard_params)
+                params_abs = abstract_params(cfg)
+                batch_abs = input_specs(cfg, shape)
+                lowered = step.lower(params_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step, param_sh = make_prefill_step(cfg, mesh, shape)
+            params_abs = abstract_params(cfg)
+            batch_abs = input_specs(cfg, shape)
+            lowered = step.lower(params_abs, batch_abs)
+        else:  # decode
+            step, _ = make_serve_step(cfg, mesh, shape)
+            params_abs = abstract_params(cfg)
+            cache_abs = abstract_cache(cfg, shape)
+            inp = input_specs(cfg, shape)["inputs"]
+            lowered = step.lower(params_abs, cache_abs, inp,
+                                 jax.ShapeDtypeStruct((), np.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+    hlo = compiled.as_text()
+    from repro.launch import hlo_analysis
+    costs = hlo_analysis.analyze(hlo)
+    loop_cost = {"flops": costs.flops, "bytes accessed": costs.bytes}
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # loop-aware per-device numbers (see hlo_analysis docstring)
+        "flops_per_dev": costs.flops,
+        "bytes_per_dev": costs.bytes,
+        "collective_bytes_per_dev": dict(costs.collectives,
+                                         total=costs.collective_total),
+        # XLA cost_analysis for reference (while bodies counted ONCE)
+        "xla_cost_flops_per_dev": float(cost.get("flops", 0.0) or 0.0),
+        "xla_cost_bytes_per_dev": float(cost.get("bytes accessed", 0.0)
+                                        or 0.0),
+        "memory": mem_info,
+        "roofline": roofline(loop_cost, costs.collective_total, n_chips,
+                             cfg, shape, shape.kind),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--pod-shard-params", action="store_true",
+                    help="FSDP over (data,pod): halves per-device weight "
+                         "memory, trades per-pod FL replica semantics")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fl-step", action="store_true",
+                    help="lower the hierarchical-FL train step (paper eq.13)")
+    ap.add_argument("--fl-local", type=int, default=1,
+                    help="H local steps between aggregations (paper's H)")
+    ap.add_argument("--fl-agg-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                tag = f"{arch}_{shape}_{args.mesh}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", args.mesh, "--out", args.out]
+                print(f"[run] {tag}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append(tag)
+                    print(r.stdout[-2000:])
+                    print(r.stderr[-4000:])
+        print("failures:", failures)
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    try:
+        rec = run_one(args.arch, args.shape, args.mesh,
+                      fsdp=not args.no_fsdp,
+                      remat=(False if args.no_remat else None),
+                      fl_step=args.fl_step, fl_local=args.fl_local,
+                      fl_agg_dtype=args.fl_agg_dtype,
+                      pod_shard_params=args.pod_shard_params)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": traceback.format_exc()}
+    suffix = ("_" + args.tag) if args.tag else ""
+    if rec.get("fl_step"):
+        suffix += "_flstep"
+    tag = f"{args.arch}_{args.shape}_{args.mesh}{suffix}"
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("error",)}, indent=2))
+    if rec["status"] == "error":
+        print(rec["error"])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

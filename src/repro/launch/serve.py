@@ -1,0 +1,50 @@
+"""pjit serve_step factory: one-token decode with a sharded KV/state cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as T
+from repro.sharding.specs import cache_pspecs, data_pspec, param_pspecs
+from .train import abstract_params
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    return jax.eval_shape(lambda: T.init_cache(cfg, b, cache_len))
+
+
+def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
+                    donate: bool = True):
+    """Returns (step_fn, (param_sh, cache_sh, input_sh)).
+
+    step(params, cache, inputs, pos) -> (logits (B, V), new_cache).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    pspecs = param_pspecs(cfg, abstract_params(cfg))
+    param_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs)
+    cache_shape = abstract_cache(cfg, shape)
+    cspecs = cache_pspecs(cfg, cache_shape, shape, multi_pod)
+    cache_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cspecs)
+    bspec = data_pspec(cfg, shape, multi_pod)
+    input_sh = NamedSharding(mesh, bspec)
+
+    def step(params, cache, inputs, pos):
+        return T.serve_step(params, cfg, cache, inputs, pos)
+
+    logits_sh = NamedSharding(mesh, P(bspec[0] if len(bspec) else None,
+                                      "model"))
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, cache_sh, input_sh, None),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, (param_sh, cache_sh, input_sh)

@@ -1,0 +1,143 @@
+"""pjit train/prefill step factories for the production mesh.
+
+``make_sharded_train_step`` builds the standard distributed trainer
+(data+tensor parallel with FSDP weights). ``make_fl_train_step`` builds the
+paper's hierarchical-FL variant: each pod holds an independent model
+replica (satellite), runs local SGD, and replicas are aggregated with the
+lambda-weighted psum of eq. (13) across the ``pod`` axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape, input_specs
+from repro.models import transformer as T
+from repro.sharding.specs import batch_axes, data_pspec, param_pspecs
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def make_sharded_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                            lr: float = 1e-3, fsdp: bool = True,
+                            pod_shard_params: bool = False,
+                            donate: bool = True):
+    """Returns (step_fn, in_shardings, out_shardings) ready to lower.
+
+    step(params, batch) -> (params, metrics); plain SGD (paper eqs. 3-6).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    pspecs = param_pspecs(cfg, abstract_params(cfg), fsdp=fsdp,
+                          pod_shard_params=pod_shard_params)
+    param_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs)
+    bspec = data_pspec(cfg, shape, multi_pod)
+    batch_sh = {
+        "inputs": NamedSharding(mesh, bspec),
+        "labels": NamedSharding(mesh, bspec),
+    }
+    step = T.make_train_step(cfg, lr=lr)
+    metrics_sh = {k: NamedSharding(mesh, P())
+                  for k in ("loss", "ce", "aux")}
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=(param_sh, metrics_sh),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, (param_sh, batch_sh), (param_sh, metrics_sh)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, shape: InputShape):
+    """Forward-only step (inference prefill): logits of the last position."""
+    multi_pod = "pod" in mesh.axis_names
+    pspecs = param_pspecs(cfg, abstract_params(cfg))
+    param_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs)
+    bspec = data_pspec(cfg, shape, multi_pod)
+
+    def prefill(params, batch):
+        h, _ = T.forward(params, cfg, batch["inputs"])
+        # last-token logits only (decode bootstrap)
+        logits = T.unembed(params, cfg, h[:, -1:, :])
+        return logits[:, 0].astype(jnp.float32)
+
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(param_sh, {"inputs": NamedSharding(mesh, bspec)}),
+        out_shardings=NamedSharding(mesh, P(bspec[0] if bspec else None)),
+    )
+    return jitted, param_sh
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical FL across pods (the paper's technique, mesh-native) ------------
+# ---------------------------------------------------------------------------
+def make_fl_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                       lr: float = 1e-3, h_local: int = 1,
+                       agg_dtype: str = "float32"):
+    """Per-pod local SGD + eq.-(13) aggregation across the ``pod`` axis.
+
+    Params carry a leading replica axis of size n_pod sharded over
+    ``pod`` (each pod = one satellite-era model replica); the inner train
+    step is vmapped over that axis, so within a pod it runs data+tensor
+    parallel as usual, and the round ends with the lambda-weighted
+    aggregation of eq. (13) — a weighted mean over the replica axis that
+    GSPMD lowers to collectives across pods. (A partial-manual shard_map
+    formulation trips an XLA SPMD partitioner check at 512 devices; the
+    vmap formulation is semantically identical.)
+    """
+    assert "pod" in mesh.axis_names, "FL step needs the multi-pod mesh"
+    n_pod = mesh.devices.shape[0]
+    base_shapes = abstract_params(cfg)
+    pspecs = param_pspecs(cfg, base_shapes, fsdp=True)
+    rep_pspecs = jax.tree_util.tree_map(
+        lambda s: P(*(("pod",) + tuple(s))), pspecs)
+    rep_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), rep_pspecs)
+    # batch carries the same leading replica axis: (n_pod, B/n_pod, ...)
+    if cfg.input_mode == "tokens":
+        in_spec = P("pod", "data", None)
+    else:
+        in_spec = P("pod", "data", None, None)
+    batch_sh = {"inputs": NamedSharding(mesh, in_spec),
+                "labels": NamedSharding(mesh, P("pod", "data", None))}
+
+    inner_step = T.make_train_step(cfg, lr=lr)
+
+    def pod_round(params_rep, batch):
+        def local(params, b):
+            for _ in range(h_local):
+                params, metrics = inner_step(params, b)
+            return params, metrics
+
+        new_rep, metrics = jax.vmap(local)(params_rep, batch)
+        # eq. (13): lambda-weighted aggregation across pod replicas
+        # (uniform data portions across pods in this lowering).
+        # agg_dtype="bfloat16" aggregates in the param dtype — a
+        # beyond-paper option halving the cross-pod collective bytes.
+        adt = jnp.dtype(agg_dtype)
+        lam = jnp.asarray(1.0 / n_pod, adt)
+        agg = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                jnp.sum(lam * x.astype(adt), axis=0,
+                        keepdims=True).astype(x.dtype), x.shape),
+            new_rep)
+        metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x), metrics)
+        return agg, metrics
+
+    metrics_sh = {k: NamedSharding(mesh, P())
+                  for k in ("loss", "ce", "aux")}
+    jitted = jax.jit(pod_round, in_shardings=(rep_sh, batch_sh),
+                     out_shardings=(rep_sh, metrics_sh),
+                     donate_argnums=(0,))
+    return jitted, rep_sh, batch_sh

@@ -1,0 +1,3 @@
+from . import cnn, layers, transformer
+
+__all__ = ["cnn", "layers", "transformer"]

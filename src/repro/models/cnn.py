@@ -1,0 +1,143 @@
+"""The paper's FL payload models (Section VI-A), in raw JAX.
+
+- MNIST:  CNN with two conv layers and two fully connected layers.
+- FMNIST: CNN with two conv layers and one fully connected layer.
+- CIFAR-10: VGG-11.
+
+Params are plain dicts of jnp arrays; ``apply(params, x)`` returns logits.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout),
+                                   jnp.float32) * std,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _dense_init(key, din, dout):
+    std = math.sqrt(2.0 / din)
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32) * std,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _conv(x, p, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# MNIST CNN: conv(32) -> pool -> conv(64) -> pool -> fc(128) -> fc(10)
+# ---------------------------------------------------------------------------
+def init_mnist_cnn(key, image_shape=(28, 28, 1), n_classes=10) -> Dict:
+    ks = jax.random.split(key, 4)
+    h, w, c = image_shape
+    flat = (h // 4) * (w // 4) * 64
+    return {"c1": _conv_init(ks[0], 3, 3, c, 32),
+            "c2": _conv_init(ks[1], 3, 3, 32, 64),
+            "f1": _dense_init(ks[2], flat, 128),
+            "f2": _dense_init(ks[3], 128, n_classes)}
+
+
+def apply_mnist_cnn(params, x):
+    x = _maxpool(jax.nn.relu(_conv(x, params["c1"])))
+    x = _maxpool(jax.nn.relu(_conv(x, params["c2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"]["w"] + params["f1"]["b"])
+    return x @ params["f2"]["w"] + params["f2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# FMNIST CNN: conv(16) -> pool -> conv(32) -> pool -> fc(10)
+# ---------------------------------------------------------------------------
+def init_fmnist_cnn(key, image_shape=(28, 28, 1), n_classes=10) -> Dict:
+    ks = jax.random.split(key, 3)
+    h, w, c = image_shape
+    flat = (h // 4) * (w // 4) * 32
+    return {"c1": _conv_init(ks[0], 3, 3, c, 16),
+            "c2": _conv_init(ks[1], 3, 3, 16, 32),
+            "f1": _dense_init(ks[2], flat, n_classes)}
+
+
+def apply_fmnist_cnn(params, x):
+    x = _maxpool(jax.nn.relu(_conv(x, params["c1"])))
+    x = _maxpool(jax.nn.relu(_conv(x, params["c2"])))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["f1"]["w"] + params["f1"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-11 for CIFAR-10
+# ---------------------------------------------------------------------------
+_VGG11 = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+def init_vgg11(key, image_shape=(32, 32, 3), n_classes=10) -> Dict:
+    params = {"convs": [], "fc": None}
+    cin = image_shape[2]
+    keys = jax.random.split(key, len([v for v in _VGG11 if v != "M"]) + 1)
+    ki = 0
+    for v in _VGG11:
+        if v == "M":
+            continue
+        params["convs"].append(_conv_init(keys[ki], 3, 3, cin, v))
+        cin = v
+        ki += 1
+    params["fc"] = _dense_init(keys[ki], 512, n_classes)
+    return params
+
+
+def apply_vgg11(params, x):
+    ci = 0
+    for v in _VGG11:
+        if v == "M":
+            x = _maxpool(x)
+        else:
+            x = jax.nn.relu(_conv(x, params["convs"][ci]))
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+MODELS: Dict[str, Tuple[Callable, Callable]] = {
+    "mnist": (init_mnist_cnn, apply_mnist_cnn),
+    "fmnist": (init_fmnist_cnn, apply_fmnist_cnn),
+    "cifar10": (init_vgg11, apply_vgg11),
+}
+
+
+def build_model(name: str, key, image_shape=None, n_classes=10):
+    init, apply = MODELS[name]
+    kw = {}
+    if image_shape is not None:
+        kw["image_shape"] = image_shape
+    params = init(key, n_classes=n_classes, **kw)
+    return params, apply
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def model_bits(params, dtype_bits: int = 32) -> float:
+    """Q(w) for the latency model."""
+    return float(param_count(params) * dtype_bits)

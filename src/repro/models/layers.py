@@ -1,0 +1,708 @@
+"""Layer library for the model zoo (raw JAX init/apply pairs).
+
+Components: RMSNorm / non-parametric LN, RoPE, GQA attention (+qk-norm,
+sliding window), MLA (DeepSeek-V2 latent attention), SwiGLU FFN, MoE FFN
+(shared + routed experts, capacity-based gather dispatch), Mamba block,
+RWKV6 block. Every attention/ssm component has a paired decode step that
+operates on an explicit cache (one token at a time) for ``serve_step``.
+
+Naming conventions of weight leaves drive the sharding rules in
+``repro.sharding.specs`` (e.g. ``wq``/``w1`` shard their output dim on the
+``model`` mesh axis and their input dim on ``data`` for FSDP).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.activations import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init(key, shape, scale_dim, dtype):
+    std = 1.0 / math.sqrt(scale_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms ----------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def rmsnorm_init(cfg: ModelConfig, dim: Optional[int] = None):
+    if cfg.norm_type == "nonparametric_ln":
+        return {}
+    return {"scale": jnp.ones((dim or cfg.d_model,), jnp.float32)}
+
+
+def norm_apply(params, x, cfg: ModelConfig):
+    """Norms compute their statistics in f32 but apply the (broadcast)
+    factor in the compute dtype, so the (B,S,D)-sized multiply never
+    materializes an f32 residual-stream tensor (EXPERIMENTS.md §Perf
+    "bf16-norm-apply")."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "nonparametric_ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + 1e-5)
+        return ((x - mu.astype(x.dtype)) * inv.astype(x.dtype))
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    factor = jax.lax.rsqrt(ms + 1e-6)
+    return x * factor.astype(x.dtype) * params["scale"].astype(x.dtype)
+
+
+def head_rmsnorm(x, scale):
+    """qk-norm: RMS-normalize the head dim. x: (..., D_head)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    factor = jax.lax.rsqrt(ms + 1e-6)
+    return x * factor.astype(x.dtype) * jnp.asarray(scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE -----------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def rope_frequencies(dim: int, theta: float):
+    return theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, None]                               # (1,1,S,D/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, None]                                  # (B,1,S,D/2)
+    # angles in f32, rotation applied in the compute dtype so no f32
+    # q/k-sized tensors are materialized (EXPERIMENTS.md §Perf "bf16-rope")
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention ---------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def gqa_init(cfg: ModelConfig, key):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": _init(ks[0], (d, hq * hd), d, dt),
+        "wk": _init(ks[1], (d, hkv * hd), d, dt),
+        "wv": _init(ks[2], (d, hkv * hd), d, dt),
+        "wo": _init(ks[3], (hq * hd, d), hq * hd, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def gqa_apply(p, x, cfg: ModelConfig, positions,
+              window: Optional[int] = None):
+    """Full-sequence causal attention (training / prefill)."""
+    from repro.kernels.flash_attention import ops as fa
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(shard(x @ p["wq"], "batch", None, "model"), hq, hd)
+    k = _split_heads(shard(x @ p["wk"], "batch", None, "model"), hkv, hd)
+    v = _split_heads(shard(x @ p["wv"], "batch", None, "model"), hkv, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"])
+        k = head_rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    win = window if window is not None else cfg.sliding_window
+    o = fa.attention(q, k, v, causal=True, window=win)
+    b, _, s, _ = o.shape
+    o = shard(o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd),
+              "batch", None, "model")
+    return shard(o @ p["wo"], "batch", None, None)
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, cache_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, cache_len, hd), dtype),
+    }
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig):
+    """One-token decode. x: (B, 1, D); cache k/v: (B, Hkv, L, hd).
+
+    ``pos`` is the absolute position of the new token; with a sliding-window
+    cache of length L the cache slot is pos % L (ring buffer).
+    """
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    q = _split_heads(x @ p["wq"], hq, hd)            # (B,Hq,1,hd)
+    k = _split_heads(x @ p["wk"], hkv, hd)
+    v = _split_heads(x @ p["wv"], hkv, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"])
+        k = head_rmsnorm(k, p["k_norm"])
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    cache_len = cache["k"].shape[2]
+    slot = jnp.mod(pos, cache_len)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                  k.astype(cache["k"].dtype),
+                                                  slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                  v.astype(cache["v"].dtype),
+                                                  slot, axis=2)
+    # positions valid: <= pos and (ring) within the window
+    idx = jnp.arange(cache_len)
+    n_written = jnp.minimum(pos + 1, cache_len)
+    valid = idx < n_written
+    group = hq // hkv
+    kr = jnp.repeat(k_cache, group, axis=1)
+    vr = jnp.repeat(v_cache, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+    return o @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2) ------------------------------
+# ---------------------------------------------------------------------------
+def mla_init(cfg: ModelConfig, key):
+    d, h = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    return {
+        "wq": _init(ks[0], (d, h * (dn + dr)), d, dt),
+        "wkv_a": _init(ks[1], (d, r + dr), d, dt),       # latent + shared rope key
+        "wkv_b": _init(ks[2], (r, h * (dn + dv)), r, dt),
+        "wo": _init(ks[3], (h * dv, d), h * dv, dt),
+        "kv_norm": jnp.ones((r,), jnp.float32),
+    }
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]                                   # (B,S,r+dr)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = head_rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,dr)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg: ModelConfig,
+                causal_mask):
+    """Attention over the latent cache.
+
+    q_nope: (B,H,Sq,dn); q_rope: (B,H,Sq,dr); c_kv: (B,Skv,r);
+    k_rope: (B,1,Skv,dr). Decompression of keys is folded into the query
+    (q_nope @ wkv_b_k), so the cache stays rank-r — the MLA trick.
+    """
+    h = cfg.n_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]         # (r,H,dn),(r,H,dv)
+    # fold key decompression into the query: (B,H,Sq,r)
+    q_lat = jnp.einsum("bhsd,rhd->bhsr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = (jnp.einsum("bhsr,btr->bhst", q_lat,
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bhsd,bhtd->bhst",
+                           q_rope.astype(jnp.float32),
+                           jnp.broadcast_to(
+                               k_rope.astype(jnp.float32),
+                               (k_rope.shape[0], h) + k_rope.shape[2:])))
+    scores = scores / math.sqrt(dn + cfg.qk_rope_head_dim)
+    if causal_mask is not None:
+        scores = jnp.where(causal_mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bhsr", probs, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhsr,rhd->bhsd", o_lat, wv_b.astype(jnp.float32))
+    return o
+
+
+def mla_apply(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    mask = (jnp.arange(s)[None, :] <= jnp.arange(s)[:, None])[None, None]
+    o = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, mask)
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(
+        b, s, cfg.n_heads * cfg.v_head_dim)
+    return o @ p["wo"]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    b = x.shape[0]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, posv)
+    cache_len = cache["c_kv"].shape[1]
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+    valid = jnp.arange(cache_len) <= pos
+    o = _mla_attend(p, q_nope, q_rope, c_cache, r_cache[:, None], cfg,
+                    valid[None, None, None, :])
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(
+        b, 1, cfg.n_heads * cfg.v_head_dim)
+    return o @ p["wo"], {"c_kv": c_cache, "k_rope": r_cache}
+
+
+# ---------------------------------------------------------------------------
+# FFNs ------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def swiglu_init(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {"w1": _init(ks[0], (d, f), d, dt),
+            "w3": _init(ks[1], (d, f), d, dt),
+            "w2": _init(ks[2], (f, d), f, dt)}
+
+
+def swiglu_apply(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "model")
+    return h @ p["w2"]
+
+
+def moe_init(cfg: ModelConfig, key):
+    d, e = cfg.d_model, cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    p = {
+        "router": _init(ks[0], (d, e), d, jnp.float32),
+        "we1": _init(ks[1], (e, d, f), d, dt),
+        "we3": _init(ks[2], (e, d, f), d, dt),
+        "we2": _init(ks[3], (e, f, d), f, dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(cfg, ks[4],
+                                  d_ff=f * cfg.n_shared_experts)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Top-k routed experts with capacity-based gather dispatch.
+
+    Two dispatch strategies (cfg.moe_grouped; EXPERIMENTS.md §Perf):
+
+    * grouped (default): routing + capacity are evaluated *per sequence*
+      (group = batch row), so the dispatched tensor (B, E, C, D) keeps the
+      batch axis sharded on ``data`` and the expert axis on ``model`` —
+      expert FLOPs scale with the full mesh.
+    * naive: tokens flattened globally; each expert gathers its top-C
+      tokens across the whole batch. The token axis loses its ``data``
+      sharding (all-gather) and expert FLOPs shard only over ``model`` —
+      16x waste on a (16,16) mesh. Kept for the perf ablation and for
+      single-token decode, where per-sequence capacity degenerates and
+      global dispatch is the right strategy.
+
+    Overflow tokens beyond capacity drop to the shared experts/identity
+    (the standard token-dropping approximation).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    if cfg.moe_grouped and s > 1:
+        # Scatter-free dispatch+combine: both directions are GATHERS, which
+        # GSPMD shards cleanly on (batch -> data, expert -> model). A
+        # scatter-add combine forces operand replication + a (B,S,D)
+        # all-reduce (EXPERIMENTS.md §Perf, iteration "moe-gather-combine").
+        logits = (x @ p["router"]).astype(jnp.float32)        # (B,S,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, k)                # (B,S,k)
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+        gates = jnp.zeros((b, s, e), jnp.float32).at[
+            jnp.arange(b)[:, None, None], jnp.arange(s)[None, :, None],
+            top_i].set(top_w)
+        cap = max(1, min(s, int(k * s / e * cfg.capacity_factor)))
+        g_bet = jax.lax.stop_gradient(gates.transpose(0, 2, 1))  # (B,E,S)
+        # rank of every token within each expert's preference order
+        # (pure index math -> no gradient; sort-grad also trips a jaxlib
+        # bug with batched gathers in this environment)
+        order = jnp.argsort(-g_bet, axis=-1)                  # (B,E,S)
+        ranks = jnp.argsort(order, axis=-1).astype(jnp.int32)
+        sel_i = order[..., :cap]                              # (B,E,C)
+        xe = jnp.take_along_axis(x[:, None], sel_i[..., None], axis=2)
+        xe = shard(xe, "batch", "model", None, None)          # (B,E,C,D)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["we1"])) \
+            * jnp.einsum("becd,edf->becf", xe, p["we3"])
+        h = shard(h, "batch", "model", None, None)
+        ye = jnp.einsum("becf,efd->becd", h, p["we2"])        # (B,E,C,D)
+        ye = shard(ye, "batch", "model", None, None)
+        # combine: token (b,s) finds its slot in each chosen expert.
+        # Reshard ye from expert-sharded to d_model-sharded first (an
+        # all-to-all); the combine gather then never crosses the expert
+        # shard, avoiding GSPMD's masked-gather + (B,S*k,D) all-reduce
+        # (EXPERIMENTS.md §Perf "moe-alltoall-combine").
+        ye = shard(ye.astype(x.dtype), "batch", None, None, "model")
+        ranks_bse = ranks.transpose(0, 2, 1)                  # (B,S,E)
+        slot = jnp.take_along_axis(ranks_bse, top_i, axis=2)  # (B,S,k)
+        valid = slot < cap
+        flat = ye.reshape(b, e * cap, d)
+        idx = top_i * cap + jnp.minimum(slot, cap - 1)        # (B,S,k)
+        yi = jnp.take_along_axis(flat, idx.reshape(b, s * k, 1), axis=1)
+        yi = shard(yi.reshape(b, s, k, d), "batch", None, None, "model")
+        w = (top_w * valid.astype(jnp.float32))[..., None]
+        out = jnp.sum(w.astype(yi.dtype) * yi, axis=2)        # (B,S,D)
+        out = shard(out, "batch", None, "model")
+        if cfg.n_shared_experts:
+            out = out + swiglu_apply(p["shared"], x)
+        return shard(out.astype(x.dtype), "batch", None, None)
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)       # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                # (T,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    gates = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], top_i].set(top_w)
+    cap = max(1, min(t, int(k * t / e * cfg.capacity_factor)))
+    g_et = gates.T                                        # (E,T)
+    sel_w, sel_i = jax.lax.top_k(g_et, cap)               # (E,C)
+    xe = jnp.take(xt, sel_i, axis=0)                      # (E,C,D)
+    xe = shard(xe, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["we1"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["we3"])
+    h = shard(h, "model", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we2"])          # (E,C,D)
+    ye = shard(ye, "model", None, None)
+    ye = ye * sel_w[..., None].astype(ye.dtype)
+    out = jnp.zeros((t, d), ye.dtype).at[sel_i.reshape(-1)].add(
+        ye.reshape(-1, d))
+    if cfg.n_shared_experts:
+        out = out + swiglu_apply(p["shared"], xt)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_aux_loss(p, x, cfg: ModelConfig):
+    """Switch-style load-balance loss (importance * load)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    probs = jax.nn.softmax((xt @ p["router"]).astype(jnp.float32), axis=-1)
+    importance = jnp.mean(probs, axis=0)
+    top1 = jnp.argmax(probs, axis=-1)
+    load = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    return cfg.n_experts * jnp.sum(importance * load)
+
+
+# ---------------------------------------------------------------------------
+# Mamba -----------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def mamba_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = cfg.expand * d
+    st, ck = cfg.d_state, cfg.d_conv
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di), d, dt),
+        "conv_w": _init(ks[1], (ck, di), ck, jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * st), di, dt),
+        "dt_proj": _init(ks[3], (dt_rank, di), dt_rank, jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[4], (di, d), di, dt),
+    }
+
+
+def _mamba_ssm_scan(u, dt, b_t, c_t, a, chunk: int = 0):
+    """Selective-state-space scan.
+
+    u: (B,S,di) input; dt: (B,S,di); b_t,c_t: (B,S,st); a: (di,st).
+    Returns y: (B,S,di).
+
+    ``chunk`` > 0 enables the chunked+remat form: an outer lax.scan over
+    S/chunk chunks whose body is ``jax.checkpoint``ed — the backward pass
+    only stores the (B,di,st) state at chunk boundaries and rematerializes
+    the per-step states, cutting the dominant training-memory term by
+    ~S/chunk (EXPERIMENTS.md §Perf). ``chunk`` = 0 is the naive per-step
+    scan, whose backward stores the state at every timestep.
+    """
+    b, s, di = u.shape
+    st = a.shape[1]
+
+    def seq_scan(h0, u_c, dt_c, bt_c, ct_c):
+        """Per-step scan over the leading (time) axis of the chunk."""
+        da = jnp.exp(jnp.einsum("sbd,dn->sbdn", dt_c, a))
+        dbu = jnp.einsum("sbd,sbn->sbdn", dt_c * u_c, bt_c)
+
+        def step(h, inp):
+            da_t, dbu_t, c = inp
+            h = da_t * h + dbu_t
+            y = jnp.einsum("bdn,bn->bd", h, c)
+            return h, y
+
+        return jax.lax.scan(step, h0, (da, dbu, ct_c.astype(jnp.float32)))
+
+    def vec_chunk(h0, u_c, dt_c, bt_c, ct_c):
+        """Vectorized chunk body (EXPERIMENTS.md §Perf "mamba-cumsum"):
+        h_t = P_t * (h_0 + cumsum_s(dbu_s / P_s)), P = cumprod(da) — the
+        whole chunk is a handful of (C,B,di,st) vector ops instead of C
+        sequential state updates. f32; 1/P is bounded for chunk <= 64."""
+        da = jnp.exp(jnp.einsum("sbd,dn->sbdn", dt_c, a))
+        dbu = jnp.einsum("sbd,sbn->sbdn", dt_c * u_c, bt_c)
+        p_inc = jnp.cumprod(da, axis=0)                       # (C,b,di,st)
+        acc = jnp.cumsum(dbu / jnp.maximum(p_inc, 1e-30), axis=0)
+        h = p_inc * (h0[None] + acc)                          # (C,b,di,st)
+        ys = jnp.einsum("sbdn,sbn->sbd", h, ct_c.astype(jnp.float32))
+        return h[-1], ys
+
+    u_t = u.transpose(1, 0, 2)
+    dt_t = dt.transpose(1, 0, 2)
+    bt_t = b_t.transpose(1, 0, 2)
+    ct_t = c_t.transpose(1, 0, 2)
+    h0 = jnp.zeros((b, di, st), jnp.float32)
+    if not chunk or s <= chunk or s % chunk != 0:
+        _, ys = seq_scan(h0, u_t, dt_t, bt_t, ct_t)
+        return ys.transpose(1, 0, 2)
+
+    n_chunks = s // chunk
+
+    def chunk_body(h, inp):
+        return vec_chunk(h, *inp)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    resh = lambda t: t.reshape(n_chunks, chunk, b, t.shape[-1])
+    _, ys = jax.lax.scan(chunk_body, h0,
+                         (resh(u_t), resh(dt_t), resh(bt_t), resh(ct_t)))
+    return ys.reshape(s, b, di).transpose(1, 0, 2)
+
+
+def mamba_apply(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    di = cfg.expand * d
+    st = cfg.d_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = shard(x @ p["in_proj"], "batch", None, "model")
+    xi, z = xz[..., :di], xz[..., di:]
+    # depthwise causal conv over the sequence
+    ck = p["conv_w"].shape[0]
+    xpad = jnp.pad(xi.astype(jnp.float32), ((0, 0), (ck - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i:i + s] * p["conv_w"][i] for i in range(ck))
+    xi = jax.nn.silu(conv + p["conv_b"])
+    proj = (xi.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    b_t = proj[..., dt_rank:dt_rank + st]
+    c_t = proj[..., dt_rank + st:]
+    a = -jnp.exp(p["a_log"])
+    y = _mamba_ssm_scan(xi, dt, b_t, c_t, a, chunk=cfg.mamba_scan_chunk)
+    y = y + xi * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype)) @ p["out_proj"]
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """One-token decode. x: (B,1,D)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    di = cfg.expand * d
+    st = cfg.d_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    ck = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(jnp.float32),
+                            xi.astype(jnp.float32)[:, None]], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", hist, p["conv_w"])
+    xi_c = jax.nn.silu(conv + p["conv_b"])
+    proj = (xi_c.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    b_t = proj[..., dt_rank:dt_rank + st]
+    c_t = proj[..., dt_rank + st:]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(jnp.einsum("bd,dn->bdn", dt, a))
+    h = da * cache["h"] + jnp.einsum("bd,bn->bdn", dt * xi_c, b_t)
+    y = jnp.einsum("bdn,bn->bd", h, c_t)
+    y = y + xi_c * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ p["out_proj"]
+    new_cache = {"h": h,
+                 "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+    return out[:, None], new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 -----------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def rwkv6_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    h = max(1, d // 64)
+    hd = d // h
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    return {
+        "time": {
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_v": jnp.full((d,), 0.5, jnp.float32),
+            "mix_w": jnp.full((d,), 0.5, jnp.float32),
+            "mix_g": jnp.full((d,), 0.5, jnp.float32),
+            "wr": _init(ks[0], (d, d), d, dt),
+            "wk": _init(ks[1], (d, d), d, dt),
+            "wv": _init(ks[2], (d, d), d, dt),
+            "ww": _init(ks[3], (d, d), d, dt),      # data-dependent decay
+            "wg": _init(ks[4], (d, d), d, dt),
+            "w_bias": jnp.full((d,), -2.0, jnp.float32),
+            "u": _init(ks[5], (h, hd), hd, jnp.float32),
+            "wo": _init(ks[6], (d, d), d, dt),
+            "ln_scale": jnp.ones((hd,), jnp.float32),
+        },
+        "channel": {
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "wck": _init(ks[7], (d, cfg.d_ff), d, dt),
+            "wcv": _init(jax.random.fold_in(key, 99), (cfg.d_ff, d),
+                         cfg.d_ff, dt),
+            "wcr": _init(jax.random.fold_in(key, 98), (d, d), d, dt),
+        },
+    }
+
+
+def _token_shift(x, prev=None):
+    """Shift sequence right by one; prev: (B,D) last token of prior chunk."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, shift_prev=None, wkv_state=None):
+    """RWKV6 time-mix (attention replacement). Returns (out, (last_x, state)).
+
+    Full-sequence form (training/prefill): uses the chunked WKV kernel.
+    """
+    from repro.kernels.wkv6 import ops as wkv_ops
+    b, s, d = x.shape
+    h = max(1, d // 64)
+    hd = d // h
+    xs = _token_shift(x, shift_prev)
+    mix = lambda m: x * m.astype(x.dtype) + xs * (1.0 - m).astype(x.dtype)
+    r = shard(mix(p["mix_r"]) @ p["wr"], "batch", None, "model")
+    k = shard(mix(p["mix_k"]) @ p["wk"], "batch", None, "model")
+    v = shard(mix(p["mix_v"]) @ p["wv"], "batch", None, "model")
+    g = shard(mix(p["mix_g"]) @ p["wg"], "batch", None, "model")
+    w_raw = mix(p["mix_w"]) @ p["ww"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32) + p["w_bias"]))
+
+    def heads(t):
+        return shard(t.reshape(b, s, h, hd).transpose(0, 2, 1, 3),
+                     "batch", "model", None, None)
+
+    o = wkv_ops.wkv(heads(r), heads(k), heads(v),
+                    heads(w.astype(x.dtype)), p["u"].astype(x.dtype))
+    # group-norm over each head then gate
+    o = head_rmsnorm(o, p["ln_scale"])
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    return o @ p["wo"], x[:, -1]
+
+
+def rwkv6_channel_mix(p, x, shift_prev=None):
+    xs = _token_shift(x, shift_prev)
+    xk = x * p["mix_k"] + xs * (1.0 - p["mix_k"])
+    xr = x * p["mix_r"] + xs * (1.0 - p["mix_r"])
+    k = jnp.square(jax.nn.relu(xk.astype(x.dtype) @ p["wck"]))
+    if k.ndim == 3:
+        k = shard(k, "batch", None, "model")
+    kv = k @ p["wcv"]
+    return jax.nn.sigmoid((xr.astype(x.dtype) @ p["wcr"]).astype(
+        jnp.float32)).astype(x.dtype) * kv, x[:, -1]
+
+
+def rwkv6_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    h = max(1, d // 64)
+    hd = d // h
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv6_time_mix_decode(p, x, cache_wkv, shift_prev, cfg: ModelConfig):
+    """One-token time-mix. x: (B,1,D)."""
+    from repro.kernels.wkv6 import ops as wkv_ops
+    b, _, d = x.shape
+    h = max(1, d // 64)
+    hd = d // h
+    xt = x[:, 0]
+    xs = shift_prev
+    mix = lambda m: xt * m + xs * (1.0 - m)
+    r = mix(p["mix_r"]).astype(x.dtype) @ p["wr"]
+    k = mix(p["mix_k"]).astype(x.dtype) @ p["wk"]
+    v = mix(p["mix_v"]).astype(x.dtype) @ p["wv"]
+    g = mix(p["mix_g"]).astype(x.dtype) @ p["wg"]
+    w_raw = mix(p["mix_w"]).astype(x.dtype) @ p["ww"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32) + p["w_bias"]))
+    hsplit = lambda t: t.reshape(b, h, hd)
+    s_new, o = wkv_ops.wkv_step(cache_wkv, hsplit(r), hsplit(k), hsplit(v),
+                                hsplit(w.astype(x.dtype)),
+                                p["u"].astype(x.dtype))
+    o = head_rmsnorm(o, p["ln_scale"])
+    o = o.reshape(b, d)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    return (o @ p["wo"])[:, None], s_new, xt
+
+
+def rwkv6_channel_mix_decode(p, x, shift_prev):
+    xt = x[:, 0]
+    xk = xt * p["mix_k"] + shift_prev * (1.0 - p["mix_k"])
+    xr = xt * p["mix_r"] + shift_prev * (1.0 - p["mix_r"])
+    k = jnp.square(jax.nn.relu(xk.astype(x.dtype) @ p["wck"]))
+    kv = k @ p["wcv"]
+    out = jax.nn.sigmoid((xr.astype(x.dtype) @ p["wcr"]).astype(
+        jnp.float32)).astype(x.dtype) * kv
+    return out[:, None], xt

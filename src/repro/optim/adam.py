@@ -1,0 +1,33 @@
+"""Adam/AdamW on pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, weight_decay: float = 0.0):
+    count = state["count"] + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state["mu"], grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state["nu"], grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, m, v):
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p
+        return p - step
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}

@@ -1,0 +1,28 @@
+"""Plain/momentum SGD on pytrees (optax is unavailable in this container)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return ()
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd_update(params, grads, state, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    """Returns (new_params, new_state)."""
+    if weight_decay:
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p, grads, params)
+    if momentum == 0.0:
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr * g, params, grads)
+        return new_params, state
+    new_state = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g, state, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: p - lr * m, params, new_state)
+    return new_params, new_state

@@ -1,0 +1,3 @@
+from .specs import (batch_axes, cache_pspecs, data_pspec, param_pspecs)
+
+__all__ = ["batch_axes", "cache_pspecs", "data_pspec", "param_pspecs"]

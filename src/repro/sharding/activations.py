@@ -1,0 +1,57 @@
+"""Activation sharding constraints (MaxText-style).
+
+GSPMD propagation from weight/input shardings alone is free to re-shard
+intermediate activations (e.g. replicate batch and shard heads), which both
+bloats memory and distorts the roofline. The model code therefore pins key
+activations via ``shard(x, ...)``, a no-op unless a mesh context has been
+installed with ``set_activation_sharding`` (smoke tests on one device skip
+it entirely).
+
+Spec tokens: "batch" -> the (pod,data) batch axes of the installed context
+(may be empty for batch-1 decode), "model" -> the tensor axis, None -> any.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX = {"mesh": None, "batch_axes": ()}
+
+
+def set_activation_sharding(mesh, batch_axes: Tuple[str, ...]):
+    _CTX["mesh"] = mesh
+    _CTX["batch_axes"] = tuple(batch_axes)
+
+
+def clear_activation_sharding():
+    _CTX["mesh"] = None
+    _CTX["batch_axes"] = ()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Tuple[str, ...]):
+    set_activation_sharding(mesh, batch_axes)
+    try:
+        yield
+    finally:
+        clear_activation_sharding()
+
+
+def shard(x, *spec):
+    """Constrain ``x``; tokens: "batch", "model", None."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    batch = _CTX["batch_axes"]
+    out = []
+    for s in spec:
+        if s == "batch":
+            out.append(batch if batch else None)
+        else:
+            out.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

@@ -1,0 +1,197 @@
+"""PartitionSpec rules for every tensor role in the model zoo.
+
+Sharding scheme (DESIGN.md §6):
+  * ``model`` axis: tensor-parallel dims — attention heads, FFN hidden,
+    experts, vocab; also the Mamba inner dim and RWKV head dim.
+  * ``data`` axis: batch (with ``pod``) + FSDP over the d_model dim of
+    weight matrices (the paper's air-node clusters).
+  * ``pod``  axis: batch only; weights are *replicated* across pods — each
+    pod is a satellite-era model replica in the FL mapping, aggregated by
+    the lambda-weighted psum (eq. 13) between rounds.
+
+Rules are keyed on weight-leaf names (see repro.models.layers docstring)
+and applied by path-walking the param pytree. Stacked block params get a
+leading layer axis -> specs are prepended with None automatically based on
+leaf rank vs. rule rank.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+
+# leaf name -> (spec without the stacked-layer axis)
+_PARAM_RULES: Dict[str, Tuple] = {
+    # attention (gqa + rwkv time-mix share names; same orientation)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "ww": ("data", "model"),
+    "wg": ("data", "model"),
+    "wr": ("data", "model"),
+    "wo": ("model", "data"),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # MLA
+    "wkv_a": ("data", None),
+    "wkv_b": (None, "model"),
+    "kv_norm": (None,),
+    # dense FFN / shared experts
+    "w1": ("data", "model"),
+    "w3": ("data", "model"),
+    "w2": ("model", "data"),
+    # MoE
+    "router": ("data", None),
+    "we1": ("model", "data", None),
+    "we3": ("model", "data", None),
+    "we2": ("model", None, "data"),
+    # mamba
+    "in_proj": ("data", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_bias": ("model",),
+    "a_log": ("model", None),
+    "d_skip": ("model",),
+    "out_proj": ("model", "data"),
+    # rwkv extras
+    "w_bias": ("model",),
+    "u": ("model", None),
+    "ln_scale": (None,),
+    "mix_r": (None,),
+    "mix_k": (None,),
+    "mix_v": (None,),
+    "mix_w": (None,),
+    "mix_g": (None,),
+    # rwkv channel-mix
+    "wck": ("data", "model"),
+    "wcv": ("model", "data"),
+    "wcr": ("data", "model"),
+    # norms
+    "scale": (None,),
+}
+
+_TOP_LEVEL = {
+    ("embed", "w"): ("model", "data"),
+    ("lm_head", "w"): ("data", "model"),
+    ("in_proj", "w"): ("data", None),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, fsdp: bool = True,
+                 pod_shard_params: bool = False):
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays).
+
+    ``fsdp=False`` drops the ``data``-axis weight sharding (weights then
+    replicate across data; used in perf experiments).
+    ``pod_shard_params=True`` additionally FSDP-shards the d_model dim over
+    ("data","pod") — a beyond-paper memory optimization (breaks the
+    per-pod-replica FL semantics, recorded in EXPERIMENTS.md §Perf).
+    """
+    data_axis = ("data", "pod") if pod_shard_params else "data"
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        rank = len(leaf.shape)
+        # top-level (embed / lm_head / model-input proj)
+        for (k0, k1), rule in _TOP_LEVEL.items():
+            if k0 in names and names[-1] == k1:
+                rule2 = tuple(data_axis if r == "data" and fsdp
+                              else (None if r == "data" else r)
+                              for r in rule)
+                return P(*rule2)
+        name = names[-1]
+        rule = _PARAM_RULES.get(name)
+        if rule is None:
+            return P()
+        rule = tuple(
+            (data_axis if fsdp else None) if r == "data" else r
+            for r in rule)
+        # prepend None for the stacked block axis
+        pad = rank - len(rule)
+        if pad < 0:
+            return P()
+        return P(*([None] * pad + list(rule)))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [spec_for(p, l) for p, l in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_shape), specs)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def data_pspec(cfg: ModelConfig, shape: InputShape, multi_pod: bool,
+               which: str = "inputs"):
+    """Sharding for a batch input: batch dim over (pod, data)."""
+    baxes = batch_axes(multi_pod)
+    b = shape.global_batch
+    n_batch_shards = int(np.prod([16 if a == "data" else 2 for a in baxes]))
+    batch_spec = baxes if b % n_batch_shards == 0 else (
+        "data" if b % 16 == 0 else None)
+    if shape.kind == "decode":
+        if which == "inputs":
+            # (B, 1) or (B, 1, D)
+            return P(batch_spec)
+        raise ValueError(which)
+    # train/prefill: (B, S) or (B, S, D) and labels (B, S)
+    return P(batch_spec)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, shape: InputShape,
+                 multi_pod: bool):
+    """Sharding for the decode cache pytree.
+
+    decode_32k (B=128): batch over (pod,data), attention-cache seq over
+    ``model``. long_500k (B=1): cache seq over ("data","model") — sequence-
+    parallel decode; state tensors (mamba/rwkv) shard their inner dim on
+    ``model``.
+    """
+    baxes = batch_axes(multi_pod)
+    b = shape.global_batch
+    n_batch = int(np.prod([16 if a == "data" else 2 for a in baxes]))
+    if b % n_batch == 0:
+        bspec: object = baxes
+        seq_axes: object = "model"
+    elif b % 16 == 0:
+        bspec = "data"
+        seq_axes = "model"
+    else:
+        bspec = None
+        seq_axes = ("data", "model")
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        rank = len(leaf.shape)
+        # stacked leading block axis always present (rank includes it)
+        if name in ("k", "v"):          # (L, B, Hkv, S, hd)
+            return P(None, bspec, None, seq_axes, None)
+        if name in ("c_kv", "k_rope"):  # (L, B, S, r)
+            return P(None, bspec, seq_axes, None)
+        if name == "h":                 # (L, B, di, st)
+            return P(None, bspec, "model", None)
+        if name == "conv":              # (L, B, ck-1, di)
+            return P(None, bspec, None, "model")
+        if name == "wkv":               # (L, B, h, hd, hd)
+            return P(None, bspec, "model", None, None)
+        if name in ("shift_t", "shift_c"):  # (L, B, D)
+            return P(None, bspec, None)
+        return P()
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [spec_for(p, l) for p, l in leaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache_shape), specs)

@@ -1,0 +1,13 @@
+import os
+
+# Keep smoke tests on ONE device: the 512-device XLA flag is set only by
+# repro.launch.dryrun (never globally, per the dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

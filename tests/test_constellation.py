@@ -1,0 +1,51 @@
+"""Tests for the Walker-Star constellation geometry + coverage windows."""
+import numpy as np
+
+from repro.core.constellation import (R_EARTH, WalkerStar, access_intervals,
+                                      elevation_angles, serving_sequence)
+
+
+def test_orbit_radius_constant():
+    ws = WalkerStar()
+    t = np.linspace(0, 3600, 10)
+    pos = ws.positions_eci(t)
+    r = np.linalg.norm(pos, axis=-1)
+    assert np.allclose(r, ws.semi_major, rtol=1e-9)
+    assert pos.shape == (10, 80, 3)
+
+
+def test_orbital_period():
+    ws = WalkerStar()
+    period = 2 * np.pi / ws.mean_motion
+    # 800 km LEO period ~ 101 minutes
+    assert 95 * 60 < period < 110 * 60
+
+
+def test_coverage_windows_exist_and_are_bounded():
+    ws = WalkerStar()
+    ivs = access_intervals(ws, t_end=2 * 3600.0, dt=10.0)
+    assert len(ivs) > 0
+    for iv in ivs:
+        assert 0 < iv.duration < 20 * 60  # LEO passes are minutes, not hours
+    # intervals sorted by start
+    starts = [iv.start for iv in ivs]
+    assert starts == sorted(starts)
+
+
+def test_serving_sequence_continuity():
+    ws = WalkerStar()
+    ivs = access_intervals(ws, t_end=4 * 3600.0, dt=10.0)
+    chain = serving_sequence(ivs, 0.0, max_sats=6)
+    assert len(chain) >= 2
+    for a, b in zip(chain, chain[1:]):
+        # next serving satellite picked at the previous one's setting time
+        assert b.end > a.end  # strictly progresses
+
+
+def test_elevation_symmetry():
+    ws = WalkerStar(n_sats=10, n_planes=2)
+    t = np.array([0.0])
+    elev = elevation_angles(ws, 40.0, -86.0, t)
+    assert elev.shape == (1, 10)
+    assert np.all(elev <= np.pi / 2 + 1e-9)
+    assert np.all(elev >= -np.pi / 2 - 1e-9)

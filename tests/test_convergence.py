@@ -1,0 +1,59 @@
+"""Tests for the Theorem-1 bound evaluator."""
+import numpy as np
+import pytest
+
+from repro.core.convergence import (ConvergenceConfig, bound_decays_to_zero,
+                                    constant_lr, decaying_lr,
+                                    max_learning_rate, theorem1_bound)
+
+
+def cfg(R=100, c=1.0, delta=1.0):
+    return ConvergenceConfig(smoothness=10.0, sigma_g=1.0,
+                             c_r=[c] * R, delta_r=[delta] * R,
+                             h_local=5, f0_minus_fstar=10.0)
+
+
+def test_learning_rate_condition_eq37():
+    c = cfg()
+    lr = max_learning_rate(c, 0)
+    assert lr == pytest.approx(1.0 / (2 * np.sqrt(2.0) * 5 * 10.0))
+
+
+def test_bound_positive_and_finite():
+    c = cfg()
+    etas = [constant_lr(c.h_local, 100)] * 100
+    b = theorem1_bound(c, etas, [0.1] * 100)
+    assert np.isfinite(b) and b > 0
+
+
+def test_bound_decays_with_R():
+    """With eta = 1/sqrt(HR) the bound must go to 0 as R grows."""
+    c = cfg(R=1)
+    curve = bound_decays_to_zero(c, 200)
+    assert curve[-1] < curve[10]
+    assert curve[-1] < curve[50]
+
+
+def test_heterogeneity_increases_bound():
+    """Larger delta_r (data dissimilarity) => larger bound (last term)."""
+    R = 50
+    etas = [constant_lr(5, R)] * R
+    lam = [0.1] * R
+    b_small = theorem1_bound(cfg(R, delta=0.5), etas, lam)
+    b_large = theorem1_bound(cfg(R, delta=5.0), etas, lam)
+    assert b_large > b_small
+
+
+def test_uniform_lambda_minimizes_variance_term():
+    """sum lambda_i^2 is minimal when portions are equal, so the bound with
+    concentrated data is larger (second term of eq. 38)."""
+    R = 50
+    etas = [constant_lr(5, R)] * R
+    b_uniform = theorem1_bound(cfg(R), etas, [1.0 / 56] * R)  # 56 nodes equal
+    b_skewed = theorem1_bound(cfg(R), etas, [0.5] * R)
+    assert b_uniform < b_skewed
+
+
+def test_decaying_lr_schedule():
+    assert decaying_lr(0.1, 0) == pytest.approx(0.1)
+    assert decaying_lr(0.1, 9) == pytest.approx(0.01)

@@ -1,0 +1,71 @@
+"""Tests for the federated data pipeline (partitioner + pools)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import FederatedPools, make_dataset, partition
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("mnist", train_fraction=0.02, seed=0)
+
+
+def test_partition_iid_covers_all(ds):
+    parts = partition(ds, n_devices=10, iid=True)
+    all_idx = np.concatenate([p.indices for p in parts])
+    assert len(all_idx) == len(ds.x_train)
+    assert len(np.unique(all_idx)) == len(all_idx)
+
+
+def test_partition_noniid_is_skewed(ds):
+    parts_iid = partition(ds, n_devices=10, iid=True, seed=0)
+    parts_nid = partition(ds, n_devices=10, iid=False, seed=0)
+
+    def label_entropy(parts):
+        ents = []
+        for p in parts:
+            y = ds.y_train[p.indices]
+            counts = np.bincount(y, minlength=10) / len(y)
+            counts = counts[counts > 0]
+            ents.append(-np.sum(counts * np.log(counts)))
+        return np.mean(ents)
+
+    assert label_entropy(parts_nid) < label_entropy(parts_iid) - 0.3
+
+
+@settings(max_examples=15, deadline=None)
+@given(alpha=st.floats(0.0, 1.0), n_devices=st.integers(2, 20))
+def test_partition_alpha_property(alpha, n_devices):
+    ds = make_dataset("fmnist", train_fraction=0.01, seed=1)
+    parts = partition(ds, n_devices=n_devices, alpha=alpha, seed=2)
+    for p in parts:
+        expected = round((1 - alpha) * p.n_samples)
+        assert abs(p.n_sensitive - expected) <= 1
+        # sensitive + offloadable = all
+        assert (len(p.sensitive_indices) + len(p.offloadable_indices)
+                == p.n_samples)
+
+
+def test_pools_conservation_and_sensitivity(ds):
+    parts = partition(ds, n_devices=5, alpha=0.6, seed=0)
+    pools = FederatedPools.from_partitions(parts, n_air=2)
+    total0 = pools.total()
+    sens0 = [len(s) for s in pools.ground_sensitive]
+    moved = pools.move_ground_to_air(0, 1, 50)
+    assert moved <= len(parts[0].offloadable_indices)
+    pools.move_air_to_sat(1, 20)
+    pools.move_sat_to_air(0, 10)
+    pools.move_air_to_ground(0, 2, 5)
+    assert pools.total() == total0
+    # sensitive pools never move
+    assert [len(s) for s in pools.ground_sensitive] == sens0
+
+
+def test_pools_clip_to_available(ds):
+    parts = partition(ds, n_devices=3, alpha=0.5, seed=0)
+    pools = FederatedPools.from_partitions(parts, n_air=1)
+    avail = len(pools.ground[0])
+    moved = pools.move_ground_to_air(0, 0, avail + 1000)
+    assert moved == avail
+    assert len(pools.ground[0]) == 0

@@ -1,0 +1,80 @@
+"""Integration tests for the FL layer: local training, aggregation, rounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import (FLConfig, aggregation_weights, fedavg, fedavg_stacked,
+                      run_fl)
+from repro.fl.client import evaluate, local_update
+from repro.models.cnn import build_model
+
+
+def test_fedavg_weights_sum_to_one():
+    w = aggregation_weights([10, 20], [5], 15)
+    assert float(jnp.sum(w)) == pytest.approx(1.0)
+    assert w.shape == (4,)
+
+
+def test_fedavg_identity():
+    """Averaging identical models returns the same model."""
+    params, _ = build_model("mnist", jax.random.PRNGKey(0))
+    out = fedavg([params, params, params], [1.0, 2.0, 3.0])
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_fedavg_stacked_matches_list():
+    params, _ = build_model("fmnist", jax.random.PRNGKey(0))
+    models = []
+    for i in range(3):
+        key = jax.random.PRNGKey(i + 1)
+        models.append(jax.tree_util.tree_map(
+            lambda x: x + 0.01 * jax.random.normal(key, x.shape), params))
+    w = jnp.asarray([0.2, 0.3, 0.5])
+    ref = fedavg(models, list(np.asarray(w)))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+    out = fedavg_stacked(stacked, w)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_local_update_reduces_loss():
+    params, apply_fn = build_model("mnist", jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    from repro.data import make_dataset
+    ds = make_dataset("mnist", train_fraction=0.01)
+    xs = jnp.asarray(ds.x_train[:160].reshape(5, 32, 28, 28, 1))
+    ys = jnp.asarray(ds.y_train[:160].reshape(5, 32))
+    l0, _ = evaluate(apply_fn, params, xs.reshape(-1, 28, 28, 1),
+                     ys.reshape(-1))
+    new_params, _ = local_update(apply_fn, params, xs, ys, 0.05)
+    l1, _ = evaluate(apply_fn, new_params, xs.reshape(-1, 28, 28, 1),
+                     ys.reshape(-1))
+    assert float(l1) < float(l0)
+
+
+@pytest.mark.slow
+def test_run_fl_end_to_end_accuracy_improves():
+    cfg = FLConfig(dataset="mnist", n_rounds=6, train_fraction=0.02,
+                   n_devices=8, n_air=2, h_local=3, eval_size=256, seed=0)
+    res = run_fl(cfg)
+    assert len(res.accuracies) == 6
+    assert res.accuracies[-1] > res.accuracies[0]
+    assert all(np.isfinite(res.losses))
+    # training time strictly increases
+    assert all(b > a for a, b in zip(res.times, res.times[1:]))
+    # privacy: ground layer keeps at least the sensitive share
+    assert res.layer_portions[-1]["ground"] >= 0.2 - 0.02
+
+
+@pytest.mark.slow
+def test_adaptive_beats_no_offloading_in_time_to_loss():
+    common = dict(dataset="mnist", n_rounds=5, train_fraction=0.02,
+                  n_devices=8, n_air=2, h_local=3, eval_size=256, seed=1)
+    adaptive = run_fl(FLConfig(strategy="adaptive", **common))
+    none = run_fl(FLConfig(strategy="none", **common))
+    # per-round latency with offloading must be lower
+    assert np.mean(adaptive.latencies) < np.mean(none.latencies)

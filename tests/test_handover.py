@@ -1,0 +1,78 @@
+"""Tests for the space-layer handover schedule (eqs. 7-12)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_default_sagin, space_latency, space_schedule
+from repro.core.latency import comp_time, handover_delay
+from repro.core.network import Satellite
+
+
+def sagin_with(sats, seed=0):
+    s = build_default_sagin(n_devices=4, n_air=1, seed=seed)
+    s.satellites = sats
+    return s
+
+
+def test_single_satellite_closed_form():
+    """eq. (8): tau = m |D| / f when the first satellite finishes."""
+    s = sagin_with([Satellite(0, f=5e9, coverage_end=np.inf)])
+    n = 1000
+    expected = comp_time(3e9, n, 5e9)
+    assert abs(space_latency(n, s) - expected) < 1e-9
+
+
+def test_two_satellite_closed_form():
+    """eq. (9): T1 + handover + remaining work at satellite 2."""
+    f1, f2, t1 = 2e9, 8e9, 100.0
+    s = sagin_with([Satellite(0, f=f1, coverage_end=t1),
+                    Satellite(1, f=f2, coverage_end=np.inf)])
+    n = 1000
+    done1 = (f1 / 3e9) * t1
+    assert done1 < n
+    hand = handover_delay(s.model_bits, s.q_bits, n - done1, s.z_isl)
+    expected = t1 + hand + 3e9 * (n - done1) / f2
+    assert abs(space_latency(n, s) - expected) < 1e-6
+
+
+def test_three_satellite_chain():
+    """eq. (11)-(12) generalization: three coverage windows."""
+    s = sagin_with([Satellite(0, f=1e9, coverage_end=50.0),
+                    Satellite(1, f=1e9, coverage_end=120.0),
+                    Satellite(2, f=9e9, coverage_end=np.inf)])
+    sch = space_schedule(5000, s)
+    assert sch.completed
+    assert len(sch.legs) == 3
+    assert sch.n_handovers == 2
+    # legs are time-ordered and non-overlapping
+    for a, b in zip(sch.legs, sch.legs[1:]):
+        assert b.start_time >= a.end_time - 1e-9
+    # all samples processed
+    assert abs(sum(l.samples_processed for l in sch.legs) - 5000) < 1e-6
+
+
+def test_zero_samples():
+    s = sagin_with([Satellite(0, f=1e9, coverage_end=10.0)])
+    assert space_latency(0, s) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 50_000),
+       f1=st.floats(1e9, 1e10), f2=st.floats(1e9, 1e10),
+       t1=st.floats(10.0, 500.0))
+def test_property_monotone_and_coverage_respected(n, f1, f2, t1):
+    s = sagin_with([Satellite(0, f=f1, coverage_end=t1),
+                    Satellite(1, f=f2, coverage_end=np.inf)])
+    lat = space_latency(n, s)
+    lat2 = space_latency(n + 100, s)
+    # monotone in the dataset size
+    assert lat2 >= lat - 1e-9
+    sch = space_schedule(n, s)
+    # a satellite never works past its coverage window
+    for leg, sat in zip(sch.legs, s.satellites):
+        assert leg.end_time <= sat.coverage_end + 1e-6
+    # handover pays the ISL delay of eq. (7)
+    if len(sch.legs) == 2:
+        rem = sch.legs[1].samples_processed
+        expected = handover_delay(s.model_bits, s.q_bits, rem, s.z_isl)
+        assert abs(sch.legs[1].handover_delay - expected) < 1e-6

@@ -1,0 +1,136 @@
+"""Unit + property tests for the adaptive offloading optimizer (Alg. 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_default_sagin, optimize_offloading
+from repro.core.latency import round_latency_no_offload
+from repro.core.network import Satellite
+from repro.core.offloading import algorithm1_literal, cluster_case1
+
+
+def make_sagin(seed=0, **kw):
+    return build_default_sagin(n_devices=kw.pop("n_devices", 10),
+                               n_air=kw.pop("n_air", 2), seed=seed, **kw)
+
+
+class TestOptimizer:
+    def test_improves_on_baseline(self):
+        sagin = make_sagin(seed=1)
+        plan = optimize_offloading(sagin)
+        assert plan.round_latency <= plan.baseline_latency + 1e-6
+
+    def test_case2_when_ground_slow(self):
+        # default setup: ground devices are 10x slower than air, satellites
+        # idle -> data must flow upward (Case II)
+        sagin = make_sagin(seed=2)
+        plan = optimize_offloading(sagin)
+        assert plan.case == 2
+        assert plan.new_sat_samples > 0
+
+    def test_case1_when_satellite_overloaded(self):
+        sagin = make_sagin(seed=3)
+        # dump everything on a slow satellite with tiny coverage
+        total = sum(d.n_samples for d in sagin.devices)
+        for d in sagin.devices:
+            d.n_samples = d.n_sensitive = 100
+        sagin.n_sat_samples = total
+        sagin.satellites = [Satellite(0, f=1e9, coverage_end=50.0),
+                            Satellite(1, f=1e9, coverage_end=100.0),
+                            Satellite(2, f=1e9, coverage_end=np.inf)]
+        plan = optimize_offloading(sagin)
+        assert plan.case == 1
+        assert plan.new_sat_samples < total
+        assert plan.round_latency <= plan.baseline_latency + 1e-6
+
+    def test_conservation(self):
+        sagin = make_sagin(seed=4)
+        total = sagin.total_samples
+        plan = optimize_offloading(sagin)
+        g, a, s = plan.new_sizes(sagin)
+        assert abs(sum(g) + sum(a) + s - total) < 1.0
+
+    def test_privacy_constraint(self):
+        """Sensitive samples never leave their device (eq. 35 cap)."""
+        sagin = make_sagin(seed=5, alpha=0.5)
+        plan = optimize_offloading(sagin)
+        g, _, _ = plan.new_sizes(sagin)
+        for k, dev in enumerate(sagin.devices):
+            assert g[k] >= dev.n_sensitive - 1e-6
+
+    def test_alpha_zero_means_no_ground_offload(self):
+        sagin = make_sagin(seed=6, alpha=0.0)
+        plan = optimize_offloading(sagin)
+        g, _, _ = plan.new_sizes(sagin)
+        for k, dev in enumerate(sagin.devices):
+            assert g[k] >= dev.n_samples - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       alpha=st.floats(0.0, 1.0),
+       sat_f=st.floats(1e9, 1e10))
+def test_property_never_worse_and_conserving(seed, alpha, sat_f):
+    sagin = build_default_sagin(n_devices=6, n_air=2, alpha=alpha,
+                                sat_f_list=[sat_f, sat_f],
+                                coverage_times=[200.0, 1e9], seed=seed)
+    total = sagin.total_samples
+    plan = optimize_offloading(sagin)
+    # 1. adaptive is never worse than no offloading
+    assert plan.round_latency <= plan.baseline_latency * (1 + 1e-6) + 1e-3
+    # 2. conservation of samples
+    g, a, s = plan.new_sizes(sagin)
+    assert abs(sum(g) + sum(a) + s - total) < 1.0
+    # 3. non-negativity
+    assert s >= -1e-6 and all(x >= -1e-6 for x in a)
+    # 4. privacy cap
+    for k, dev in enumerate(sagin.devices):
+        assert g[k] >= dev.n_sensitive - 1.0
+
+
+def test_literal_algorithm1_matches_fast_path():
+    """The pseudocode-faithful Algorithm 1 and the closed-form fast path
+    must land on allocations with (near-)equal objective values."""
+    sagin = make_sagin(seed=7)
+    # put some data on the satellite/air so Case-I balancing is non-trivial
+    sagin.air_nodes[0].n_samples = 2000
+    d_s2a = 500.0
+    from repro.core.offloading import evaluate_cluster, ClusterPlan
+    fast = cluster_case1(sagin, 0, d_s2a)
+    lit = algorithm1_literal(sagin, 0, d_s2a)
+    lit_plan = ClusterPlan(n=0, d_space_air=d_s2a,
+                           d_air_ground={k: v for k, v in lit.items()
+                                         if v > 1e-3})
+    t_fast = evaluate_cluster(sagin, fast)
+    t_lit = evaluate_cluster(sagin, lit_plan)
+    # same optimum within bisection tolerance (5%)
+    assert t_fast <= t_lit * 1.05 + 1e-3
+
+
+def test_literal_algorithm2_matches_fast_path():
+    """The printed Algorithm 2 and the grid-based fast path must reach
+    (near-)equal round latencies in Case I."""
+    from repro.core.offloading import (ClusterPlan, OffloadPlan,
+                                       algorithm2_literal, cluster_case1,
+                                       evaluate_plan)
+    from repro.core.handover import space_latency
+    sagin = make_sagin(seed=11)
+    # overload the satellite so Case I applies
+    total = sum(d.n_samples for d in sagin.devices)
+    for d in sagin.devices:
+        d.n_samples = d.n_sensitive = 100
+    sagin.n_sat_samples = total
+    sagin.satellites = [Satellite(0, f=1e9, coverage_end=120.0),
+                        Satellite(1, f=1e9, coverage_end=np.inf)]
+    fast = optimize_offloading(sagin)
+    assert fast.case == 1
+    lit_alloc = algorithm2_literal(sagin)
+    clusters = [cluster_case1(sagin, n, lit_alloc[n]) for n in sagin.clusters]
+    lit = OffloadPlan(case=1, clusters=clusters,
+                      new_sat_samples=sagin.n_sat_samples
+                      - sum(lit_alloc.values()),
+                      space_latency=0.0, round_latency=0.0,
+                      baseline_latency=0.0)
+    t_lit = evaluate_plan(sagin, lit)
+    # fast path is no worse than the literal pseudocode (within 10%)
+    assert fast.round_latency <= t_lit * 1.10 + 1e-3
