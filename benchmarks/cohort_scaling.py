@@ -1,0 +1,190 @@
+"""Cohort-engine scaling: batched vs sequential round execution.
+
+Drives the two ``run_fl`` round engines (``repro.fl.rounds._round_batched``
+and ``_round_sequential``) over synthetic federated pools at cohort sizes
+C in {16, 64, 256, 1024} and reports per-round wall time, rounds/sec and
+the batched-over-sequential speedup.
+
+The default workload is the many-small-clients regime the paper's SAGIN
+targets (tens to thousands of sensor-class devices, each holding a few
+dozen samples): a 64-feature logistic-regression payload with per-client
+batches of <= 8. There the sequential engine's cost is C jitted dispatches
+plus C host->device transfers per round, while the batched engine issues
+ONE compiled ``cohort_local_update`` over the padded ``(C, H, B, ...)``
+cohort — the dispatch overhead is amortized C-fold. ``--payload mlp|cnn``
+switches to the heavier paper payloads (where CPU conv gradients are
+compute-bound and the win shrinks; on TPU the vmapped cohort step is the
+intended path regardless).
+
+Pools are RAGGED (heterogeneous sizes) and DRIFT between rounds, as the
+offloading optimizer does in real runs: the sequential engine also pays a
+fresh XLA compile for every previously-unseen (H, B) batch shape, while
+the batched engine's padded shapes stay stable and compile once. Round 1
+is reported separately as the warmup/compile round; the headline numbers
+and the speedup are means over the remaining rounds.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.cohort_scaling
+  PYTHONPATH=src python -m benchmarks.cohort_scaling --payload mlp \
+      --cohorts 16 64 --rounds 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.rounds import FLConfig, _round_batched, _round_sequential
+
+from .common import row
+
+
+# --------------------------------------------------------------------------
+# FL payloads (client models)
+# --------------------------------------------------------------------------
+def _logreg(key, din, nc=10):
+    params = {"w": jax.random.normal(key, (din, nc)) * 0.05,
+              "b": jnp.zeros(nc)}
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"] + p["b"]
+
+    return params, apply_fn
+
+
+def _mlp(key, din, dh=64, nc=10):
+    k1, k2 = jax.random.split(key)
+    params = {"w1": jax.random.normal(k1, (din, dh)) * 0.05,
+              "b1": jnp.zeros(dh),
+              "w2": jax.random.normal(k2, (dh, nc)) * 0.05,
+              "b2": jnp.zeros(nc)}
+
+    def apply_fn(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    return params, apply_fn
+
+
+def _cnn(key, din):
+    from repro.models.cnn import build_model
+    return build_model("mnist", key, image_shape=(28, 28, 1))
+
+
+PAYLOADS = {"logreg": _logreg, "mlp": _mlp, "cnn": _cnn}
+PAYLOAD_DIN = {"logreg": 64, "mlp": 784, "cnn": None}
+
+
+def _make_pools(n_samples, c, h, rng):
+    """Ragged client pools: lognormal sizes, every client non-empty."""
+    sizes = np.maximum(h, rng.lognormal(3.0, 0.8, c).astype(int))
+    sizes = np.minimum(sizes, max(h, n_samples // max(1, c)))
+    perm = rng.permutation(n_samples)
+    pools, pos = [], 0
+    for s in sizes:
+        pools.append(perm[pos:pos + s].copy())
+        pos += s
+    return pools
+
+
+def _drift(pools, rng, frac=0.15):
+    """Move ~frac of a few clients' samples to others (offloading churn)."""
+    pools = [p.copy() for p in pools]
+    c = len(pools)
+    for _ in range(max(1, c // 4)):
+        src, dst = rng.integers(0, c, 2)
+        if src == dst or len(pools[src]) <= 2:
+            continue
+        k = max(1, int(frac * len(pools[src])))
+        pools[dst] = np.concatenate([pools[dst], pools[src][:k]])
+        pools[src] = pools[src][k:]
+    return pools
+
+
+def bench_cohort(c, payload="logreg", h=5, batch_cap=8, rounds=5, seed=0,
+                 seq=True):
+    rng = np.random.default_rng(seed)
+    din = PAYLOAD_DIN[payload]
+    n = max(4096, c * 48)
+    if payload == "cnn":
+        x = rng.normal(size=(n, 28, 28, 1)).astype(np.float32)
+    else:
+        x = rng.normal(size=(n, din)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    ds = SimpleNamespace(x_train=x, y_train=y)
+
+    params, apply_fn = PAYLOADS[payload](jax.random.PRNGKey(seed), din)
+    cfg = FLConfig(n_devices=c, n_air=0, h_local=h, lr=0.05,
+                   batch_cap=batch_cap, seed=seed,
+                   cohort_batch_align=max(8, batch_cap))
+
+    # identical pool schedule for both engines
+    pools0 = _make_pools(n, c, h, rng)
+    schedule = [pools0]
+    for _ in range(rounds - 1):
+        schedule.append(_drift(schedule[-1], rng))
+    total = sum(len(p) for p in pools0)
+
+    def run(engine):
+        times = []
+        eng_rng = np.random.default_rng(seed + 1)
+        p = params
+        for pools in schedule:
+            t0 = time.perf_counter()
+            p, _ = engine(cfg, apply_fn, p, ds, pools, total, eng_rng)
+            jax.block_until_ready(p)
+            times.append(time.perf_counter() - t0)
+        return times
+
+    t_bat = run(_round_batched)
+    t_seq = run(_round_sequential) if seq else None
+    return t_bat, t_seq
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--payload", default="logreg", choices=sorted(PAYLOADS))
+    ap.add_argument("--cohorts", type=int, nargs="+",
+                    default=[16, 64, 256, 1024])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--h-local", type=int, default=5)
+    ap.add_argument("--batch-cap", type=int, default=8)
+    ap.add_argument("--skip-seq-above", type=int, default=1024,
+                    help="skip the sequential engine beyond this C")
+    args = ap.parse_args()
+
+    print(f"# cohort_scaling payload={args.payload} h={args.h_local} "
+          f"batch_cap={args.batch_cap} rounds={args.rounds}")
+    print("# C, batched_round_s (warmup | steady), seq_round_s "
+          "(warmup | steady), batched rounds/s, speedup")
+    for c in args.cohorts:
+        seq = c <= args.skip_seq_above
+        t_bat, t_seq = bench_cohort(c, payload=args.payload,
+                                    h=args.h_local,
+                                    batch_cap=args.batch_cap,
+                                    rounds=args.rounds, seq=seq)
+        bat_steady = float(np.mean(t_bat[1:])) if len(t_bat) > 1 else t_bat[0]
+        rps = 1.0 / bat_steady
+        if t_seq is not None:
+            seq_steady = (float(np.mean(t_seq[1:])) if len(t_seq) > 1
+                          else t_seq[0])
+            speedup = seq_steady / bat_steady
+            print(f"C={c:5d}  batched {t_bat[0]:7.2f}s | {bat_steady:7.3f}s"
+                  f"   seq {t_seq[0]:7.2f}s | {seq_steady:7.3f}s"
+                  f"   {rps:8.2f} rounds/s   speedup {speedup:5.1f}x",
+                  flush=True)
+            row(f"cohort_scaling_C{c}_{args.payload}", bat_steady * 1e6,
+                f"speedup={speedup:.1f}x")
+        else:
+            print(f"C={c:5d}  batched {t_bat[0]:7.2f}s | {bat_steady:7.3f}s"
+                  f"   seq   (skipped)   {rps:8.2f} rounds/s", flush=True)
+            row(f"cohort_scaling_C{c}_{args.payload}", bat_steady * 1e6,
+                "seq_skipped")
+
+
+if __name__ == "__main__":
+    main()

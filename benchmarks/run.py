@@ -11,11 +11,12 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import (complexity, convergence_bound, fig4_time_to_accuracy,
-                   fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
-                   fl_payload_scaling, handover_dynamics, kernels_micro,
-                   roofline_report)
+    from . import (cohort_scaling, complexity, convergence_bound,
+                   fig4_time_to_accuracy, fig5_compute_ablation,
+                   fig6_alpha_sweep, fig7_pathloss, fl_payload_scaling,
+                   handover_dynamics, kernels_micro, roofline_report)
     modules = [
+        ("cohort_scaling", cohort_scaling),
         ("fig5_compute_ablation", fig5_compute_ablation),
         ("handover_dynamics", handover_dynamics),
         ("fl_payload_scaling", fl_payload_scaling),

@@ -1,0 +1,53 @@
+"""JAX-version compatibility shims.
+
+The reproduction targets a range of JAX releases, and two APIs it relies on
+moved/changed shape across that range:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map.shard_map``
+  to top-level ``jax.shard_map`` (jax >= 0.4.35 exposes one or the other,
+  newer releases only the top-level name).
+* ``Compiled.cost_analysis()`` historically returned a list with one dict
+  per program, and newer releases return the dict directly.
+
+Everything that touches either API goes through this module so the rest of
+the codebase can be written against a single stable surface.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+__all__ = ["shard_map", "normalize_cost_analysis", "cost_analysis"]
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm  # noqa: F811
+    return sm
+
+
+#: Version-stable ``shard_map`` (prefers ``jax.shard_map``, falls back to
+#: ``jax.experimental.shard_map.shard_map`` on older releases).
+shard_map = _resolve_shard_map()
+
+
+def normalize_cost_analysis(cost: Any) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` output to a flat dict.
+
+    Accepts the raw return value in any of its historical shapes
+    (``None``, ``{...}``, or ``[{...}]``) and always returns a dict, so
+    callers can do ``cost["flops"]`` regardless of the JAX version.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` with the version shim applied."""
+    return normalize_cost_analysis(compiled.cost_analysis())

@@ -1,7 +1,21 @@
-"""Host-side batching pipeline for FL training and the big-model trainer."""
+"""Host-side batching pipeline for FL training and the big-model trainer.
+
+Two entry points feed the FL round driver:
+
+* ``batch_for_local_steps`` — per-node (H, B) batch stacks, used by the
+  sequential execution path (one dispatch per node).
+* ``build_cohort`` — the batched path's cohort builder: it gathers every
+  data-holding node's (H, B) stack into ONE padded ``(C, H, Bmax, ...)``
+  tensor plus a per-client validity mask and per-client pool sizes, so a
+  single vmapped+jitted local-update step can train the whole cohort.
+  Batches are drawn through ``batch_for_local_steps`` with the same RNG
+  stream and call order as the sequential loop, which is what makes the
+  two execution modes numerically equivalent at equal seeds.
+"""
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+import dataclasses
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -54,3 +68,79 @@ def batch_for_local_steps(x: np.ndarray, y: np.ndarray, indices: np.ndarray,
     pool = np.concatenate([rng.permutation(indices) for _ in range(reps)])
     sel = pool[:need].reshape(n_steps, b)
     return x[sel], y[sel]
+
+
+@dataclasses.dataclass
+class CohortBatch:
+    """A full round's worth of client batches, padded and masked.
+
+    ``xs[c, h, :sizes-derived-B_c]`` are client ``c``'s real samples for
+    local step ``h``; slots beyond that (and whole clients beyond
+    ``n_clients``, when the cohort is padded to a fixed width) are zero
+    and carry ``mask == 0`` so they contribute nothing to loss, gradient,
+    or aggregation.
+    """
+    xs: np.ndarray        # (C, H, Bmax, ...) float
+    ys: np.ndarray        # (C, H, Bmax) int
+    mask: np.ndarray      # (C, H, Bmax) float32; 1.0 = real sample
+    sizes: np.ndarray     # (C,) int pool size per client; 0 = padding client
+
+    @property
+    def n_clients(self) -> int:
+        """Number of real (data-holding) clients in the cohort."""
+        return int(np.sum(self.sizes > 0))
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.xs.shape
+
+
+def build_cohort(x: np.ndarray, y: np.ndarray,
+                 pools: Sequence[np.ndarray], n_steps: int,
+                 rng: np.random.Generator, max_batch: int = 64,
+                 pad_clients: int = 0,
+                 batch_align: int = 32) -> "CohortBatch | None":
+    """Gather heterogeneous node pools into one (C, H, Bmax, ...) cohort.
+
+    Each non-empty pool is batched via ``batch_for_local_steps`` (same RNG
+    stream and call order as the sequential driver, so both execution
+    modes see identical samples), then right-padded along the batch axis
+    to a common ``Bmax``. ``Bmax`` is rounded up to a multiple of
+    ``batch_align`` and the client axis is optionally padded up to
+    ``pad_clients`` zero-weight dummies — both quantize the compiled
+    cohort step's shapes so that pool drift only forces a recompile when
+    the round's largest per-client batch crosses an alignment bucket.
+    Note ``Bmax`` is global: every client is padded to the widest
+    client's batch, which is wasteful when pool sizes are heavily
+    skewed.
+    """
+    per_client: List[Tuple[np.ndarray, np.ndarray]] = []
+    sizes: List[int] = []
+    for idx in pools:
+        idx = np.asarray(idx)
+        if len(idx) == 0:
+            continue
+        out = batch_for_local_steps(x, y, idx, n_steps, rng,
+                                    max_batch=max_batch)
+        per_client.append(out)
+        sizes.append(len(idx))
+    if not per_client:
+        return None
+
+    b_max = max(bx.shape[1] for bx, _ in per_client)
+    align = max(1, int(batch_align))
+    b_max = int(np.ceil(b_max / align) * align)
+    c = max(len(per_client), int(pad_clients))
+
+    sample_shape = x.shape[1:]
+    xs = np.zeros((c, n_steps, b_max) + sample_shape, dtype=x.dtype)
+    ys = np.zeros((c, n_steps, b_max), dtype=y.dtype)
+    mask = np.zeros((c, n_steps, b_max), dtype=np.float32)
+    for ci, (bx, by) in enumerate(per_client):
+        b = bx.shape[1]
+        xs[ci, :, :b] = bx
+        ys[ci, :, :b] = by
+        mask[ci, :, :b] = 1.0
+    out_sizes = np.zeros(c, dtype=np.int64)
+    out_sizes[:len(sizes)] = sizes
+    return CohortBatch(xs=xs, ys=ys, mask=mask, sizes=out_sizes)

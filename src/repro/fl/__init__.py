@@ -1,10 +1,13 @@
 from .aggregation import (aggregation_weights, fedavg, fedavg_stacked,
                           hierarchical_weighted_psum)
 from .baselines import ALL_SCHEMES, BASELINES
-from .client import cross_entropy, evaluate, local_update, vmapped_local_update
+from .client import (cohort_local_update, cross_entropy, evaluate,
+                     local_update, masked_cross_entropy, masked_local_update,
+                     vmapped_local_update)
 from .rounds import FLConfig, FLResult, run_fl
 
 __all__ = ["aggregation_weights", "fedavg", "fedavg_stacked",
            "hierarchical_weighted_psum", "ALL_SCHEMES", "BASELINES",
-           "cross_entropy", "evaluate", "local_update",
+           "cohort_local_update", "cross_entropy", "evaluate",
+           "local_update", "masked_cross_entropy", "masked_local_update",
            "vmapped_local_update", "FLConfig", "FLResult", "run_fl"]

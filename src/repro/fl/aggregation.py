@@ -31,16 +31,20 @@ def fedavg(params_list: List, weights: Sequence[float]):
     return jax.tree_util.tree_map(combine, *params_list)
 
 
-@jax.jit
-def fedavg_stacked(stacked_params, weights):
+@partial(jax.jit, static_argnames=("interpret",))
+def fedavg_stacked(stacked_params, weights, interpret: bool = False):
     """eq. (13) over stacked params (leading client axis C).
 
-    Uses the fused Pallas aggregation kernel on TPU, jnp elsewhere.
+    Uses the fused Pallas aggregation kernel on TPU, jnp elsewhere;
+    ``interpret=True`` forces the Pallas kernel in interpret mode (CPU
+    validation of the TPU path).
     """
     from repro.kernels.fedavg_agg import ops as agg_ops
     w = weights / jnp.sum(weights)
     return jax.tree_util.tree_map(
-        lambda leaf: agg_ops.weighted_aggregate(leaf, w), stacked_params)
+        lambda leaf: agg_ops.weighted_aggregate(leaf, w,
+                                                interpret=interpret),
+        stacked_params)
 
 
 def hierarchical_weighted_psum(local_params, lam, axis_names):

@@ -3,6 +3,13 @@
 ``local_update`` is a jitted lax.scan over H steps; ``vmapped_local_update``
 runs a stacked batch of clients at once (used by the mesh FL runner, where
 the client axis is sharded over the device mesh).
+
+``masked_local_update`` / ``cohort_local_update`` are the batched round
+engine's versions: they accept a per-sample validity mask so clients with
+heterogeneous pool sizes can share one padded ``(C, H, Bmax, ...)`` cohort
+tensor. Masked slots contribute exactly zero loss and gradient, so a
+client's update equals what ``local_update`` computes on its unpadded
+batches (the numerical-equivalence contract of the batched engine).
 """
 from __future__ import annotations
 
@@ -54,6 +61,56 @@ def vmapped_local_update(apply_fn: Callable, stacked_params, xs, ys, lrs):
         return local_update(apply_fn, params, x, y, lr)
 
     return jax.vmap(one)(stacked_params, xs, ys, lrs)
+
+
+def masked_cross_entropy(logits, labels, mask):
+    """Mean NLL over the valid (mask == 1) samples of a padded batch.
+
+    With an all-ones mask this equals ``cross_entropy``; padded slots are
+    excluded from both the numerator and the denominator, and an all-zero
+    mask (a padding client) yields loss 0 with zero gradient.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+@partial(jax.jit, static_argnums=(0,))
+def masked_local_update(apply_fn: Callable, params, xs, ys, mask, lr):
+    """``local_update`` over padded batches.
+
+    xs: (H, B, ...), ys: (H, B), mask: (H, B). Returns
+    (new_params, mean_loss) where padded slots are ignored.
+    """
+    def step(p, batch):
+        x, y, m = batch
+
+        def loss_fn(p):
+            return masked_cross_entropy(apply_fn(p, x), y, m)
+
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        return p, loss
+
+    new_params, losses = jax.lax.scan(step, params, (xs, ys, mask))
+    return new_params, jnp.mean(losses)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def cohort_local_update(apply_fn: Callable, params, xs, ys, mask, lr):
+    """One compiled step training a whole cohort of clients.
+
+    ``params`` is the single global model (broadcast to every client, no
+    host-side replication); xs: (C, H, B, ...), ys/mask: (C, H, B).
+    Returns (stacked_params with leading client axis C, per-client mean
+    losses of shape (C,)). Padding clients (all-zero mask rows) come back
+    with unchanged params and loss 0.
+    """
+    def one(x, y, m):
+        return masked_local_update(apply_fn, params, x, y, m, lr)
+
+    return jax.vmap(one)(xs, ys, mask)
 
 
 @partial(jax.jit, static_argnums=(0,))

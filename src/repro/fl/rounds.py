@@ -5,6 +5,36 @@ with *real* federated training on a (synthetic) dataset: every node that
 holds samples runs H local SGD iterations, models are aggregated with the
 eq.-(13) lambda weights, and the wall clock advances by the optimized round
 latency. Produces accuracy-versus-training-time curves (Figs. 4, 6, 7).
+
+Execution modes (``FLConfig.execution``):
+
+* ``"batched"`` — the cohort engine. Every data-holding node's (H, B)
+  batch stack is gathered into one padded, masked ``(C, H, Bmax, ...)``
+  cohort tensor (``repro.data.pipeline.build_cohort``), all C clients
+  train in a single compiled ``cohort_local_update`` step, and
+  aggregation runs over the stacked client axis via ``fedavg_stacked``
+  (the Pallas ``fedavg_agg`` kernel path on TPU). The client axis is
+  padded to the fixed cohort width ``n_devices + n_air + 1`` with
+  zero-mask, zero-weight dummies, and the batch axis is aligned up to a
+  multiple of ``cohort_batch_align``. Recompiles therefore happen only
+  when the round's LARGEST per-client batch crosses an alignment bucket
+  (as offloading concentrates data on one node), instead of once per
+  distinct ragged batch shape as in the sequential loop. Caveat: every
+  client pays the widest client's batch width — in heavily skewed
+  regimes (one huge satellite pool, many tiny devices) the cohort is
+  mostly zero-mask padding; size-bucketed sub-cohorts are the natural
+  extension if that regime dominates.
+* ``"sequential"`` — the reference loop: one ``local_update`` dispatch
+  per node, host-side ``fedavg`` over a model list.
+* ``"auto"`` (default) — ``"batched"`` on accelerator backends where the
+  vmapped cohort step is the whole point, ``"sequential"`` on CPU where
+  XLA's grouped per-client conv gradients make the vmapped step slower
+  than the loop for conv payloads (see ``benchmarks/cohort_scaling.py``
+  for the regimes where batched wins even on CPU).
+
+Both modes draw mini-batches from the same RNG stream in the same node
+order (ground 0..K-1, then air, then satellite), so at equal seeds they
+produce the same accuracy trajectory up to float reduction-order noise.
 """
 from __future__ import annotations
 
@@ -21,8 +51,8 @@ from repro.core.network import SAGIN
 from repro.data import Dataset, FederatedPools, make_dataset, partition
 from repro.models.cnn import build_model, model_bits
 
-from .aggregation import fedavg
-from .client import evaluate, local_update
+from .aggregation import fedavg, fedavg_stacked
+from .client import cohort_local_update, evaluate, local_update
 
 
 @dataclasses.dataclass
@@ -42,6 +72,14 @@ class FLConfig:
     eval_size: int = 1024
     seed: int = 0
     use_constellation: bool = False  # True: drive T_i from Walker-Star
+    execution: str = "auto"        # auto|batched|sequential (module docstring)
+    cohort_batch_align: int = 32   # batched mode: pad Bmax to this multiple
+
+    def resolved_execution(self) -> str:
+        if self.execution == "auto":
+            return ("batched" if jax.default_backend() != "cpu"
+                    else "sequential")
+        return self.execution
 
 
 @dataclasses.dataclass
@@ -73,6 +111,60 @@ def _train_node(apply_fn, params, ds, idx, h, lr, batch_cap, rng):
     return new_params, float(loss)
 
 
+def _node_pools(cfg: FLConfig, pools) -> List[np.ndarray]:
+    """Index pools of every data-holding node, in canonical node order
+    (ground 0..K-1, air 0..N-1, satellite) — the order both execution
+    modes must share for RNG-stream equivalence."""
+    out = []
+    for k in range(cfg.n_devices):
+        idx = pools.ground_all(k)
+        if len(idx):
+            out.append(idx)
+    for n in range(cfg.n_air):
+        if len(pools.air[n]):
+            out.append(pools.air[n])
+    if len(pools.sat):
+        out.append(pools.sat)
+    return out
+
+
+def _round_sequential(cfg: FLConfig, apply_fn, params, ds, node_pools,
+                      total, rng):
+    """Reference engine: one jitted dispatch per node, host-side fedavg."""
+    new_models, weights, losses = [], [], []
+    for idx in node_pools:
+        out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
+                          cfg.lr, cfg.batch_cap, rng)
+        if out is not None:
+            new_models.append(out[0])
+            weights.append(len(idx) / total)
+            losses.append(out[1])
+    if new_models:
+        params = fedavg(new_models, weights)
+    return params, losses
+
+
+def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
+                   total, rng):
+    """Cohort engine: all clients in one compiled vmapped step, stacked
+    eq.-(13) aggregation (Pallas ``fedavg_agg`` path on TPU)."""
+    from repro.data.pipeline import build_cohort
+    cohort = build_cohort(ds.x_train, ds.y_train, node_pools, cfg.h_local,
+                          rng, max_batch=cfg.batch_cap,
+                          pad_clients=cfg.n_devices + cfg.n_air + 1,
+                          batch_align=cfg.cohort_batch_align)
+    if cohort is None:
+        return params, []
+    stacked, client_losses = cohort_local_update(
+        apply_fn, params, jnp.asarray(cohort.xs), jnp.asarray(cohort.ys),
+        jnp.asarray(cohort.mask), cfg.lr)
+    weights = jnp.asarray(cohort.sizes / total, jnp.float32)
+    params = fedavg_stacked(stacked, weights)
+    valid = cohort.sizes > 0
+    losses = [float(l) for l in np.asarray(client_losses)[valid]]
+    return params, losses
+
+
 def run_fl(cfg: FLConfig) -> FLResult:
     rng = np.random.default_rng(cfg.seed)
     ds = make_dataset(cfg.dataset, seed=cfg.seed,
@@ -101,6 +193,12 @@ def run_fl(cfg: FLConfig) -> FLResult:
     orch = SAGINOrchestrator(sagin, constellation=constellation,
                              sat_f_seed=cfg.seed, strategy=cfg.strategy)
 
+    execution = cfg.resolved_execution()
+    if execution not in ("batched", "sequential"):
+        raise ValueError(
+            f"FLConfig.execution must be 'auto', 'batched' or "
+            f"'sequential', got {cfg.execution!r}")
+
     result = FLResult(cfg, [], [], [], [], [], [])
     eval_idx = rng.choice(len(ds.x_test),
                           size=min(cfg.eval_size, len(ds.x_test)),
@@ -114,38 +212,14 @@ def run_fl(cfg: FLConfig) -> FLResult:
         _sync_sizes(pools, sagin)
 
         # ---- local training at every node that holds data ----------------
-        new_models, weights, losses = [], [], []
         total = pools.total()
-        for k in range(cfg.n_devices):
-            idx = pools.ground_all(k)
-            if len(idx) == 0:
-                continue
-            out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
-                              cfg.lr, cfg.batch_cap, rng)
-            if out is not None:
-                new_models.append(out[0])
-                weights.append(len(idx) / total)
-                losses.append(out[1])
-        for n in range(cfg.n_air):
-            idx = pools.air[n]
-            if len(idx) == 0:
-                continue
-            out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
-                              cfg.lr, cfg.batch_cap, rng)
-            if out is not None:
-                new_models.append(out[0])
-                weights.append(len(idx) / total)
-                losses.append(out[1])
-        if len(pools.sat) > 0:
-            out = _train_node(apply_fn, params, ds, pools.sat, cfg.h_local,
-                              cfg.lr, cfg.batch_cap, rng)
-            if out is not None:
-                new_models.append(out[0])
-                weights.append(len(pools.sat) / total)
-                losses.append(out[1])
-
-        if new_models:
-            params = fedavg(new_models, weights)
+        node_pools = _node_pools(cfg, pools)
+        if execution == "batched":
+            params, losses = _round_batched(cfg, apply_fn, params, ds,
+                                            node_pools, total, rng)
+        else:
+            params, losses = _round_sequential(cfg, apply_fn, params, ds,
+                                               node_pools, total, rng)
 
         loss, acc = evaluate(apply_fn, params, x_eval, y_eval)
         result.times.append(orch.wall_clock)

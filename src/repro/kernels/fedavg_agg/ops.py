@@ -11,9 +11,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def weighted_aggregate(stacked: jnp.ndarray, weights: jnp.ndarray
-                       ) -> jnp.ndarray:
-    """eq. (13): sum_c weights[c] * stacked[c] over the client axis."""
+def weighted_aggregate(stacked: jnp.ndarray, weights: jnp.ndarray,
+                       interpret: bool = False) -> jnp.ndarray:
+    """eq. (13): sum_c weights[c] * stacked[c] over the client axis.
+
+    ``interpret=True`` runs the Pallas kernel in interpret mode on any
+    backend (used to validate the TPU path on CPU).
+    """
+    if interpret:
+        return kernel.weighted_aggregate(stacked, weights, interpret=True)
     if _on_tpu():
         return kernel.weighted_aggregate(stacked, weights)
     return ref.weighted_aggregate(stacked, weights)

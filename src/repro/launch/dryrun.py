@@ -164,9 +164,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, list):
-        cost = cost[0] if cost else {}
+    from repro.compat import cost_analysis
+    cost = cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_info = {

@@ -226,6 +226,16 @@ def _comp_costs(comp: Computation, comps: Dict[str, Computation],
     return total
 
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """XLA's own ``cost_analysis`` as a flat dict (version-normalized).
+
+    Reference numbers only — while bodies are counted ONCE by XLA; use
+    ``analyze`` for loop-aware costs.
+    """
+    from repro.compat import cost_analysis
+    return cost_analysis(compiled)
+
+
 def analyze(hlo: str) -> Costs:
     """Loop-aware per-device costs of a compiled HLO module."""
     comps = parse_computations(hlo)

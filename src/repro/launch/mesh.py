@@ -11,6 +11,12 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import shard_map  # noqa: F401  (version-stable re-export
+#                                    for mesh programs; see repro.compat)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "shard_map",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape, input_specs
 from repro.models import transformer as T
@@ -77,6 +78,26 @@ def make_prefill_step(cfg: ModelConfig, mesh, shape: InputShape):
         out_shardings=NamedSharding(mesh, P(bspec[0] if bspec else None)),
     )
     return jitted, param_sh
+
+
+def make_replica_agg_step(mesh, axis_names, spec):
+    """Standalone eq.-(13) aggregation across mesh axes, shard_map-native.
+
+    Wraps ``hierarchical_weighted_psum`` in ``repro.compat.shard_map`` (so
+    it works across the jax versions that moved the API). Returns a jitted
+    ``agg(tree, lam)`` where every leaf of ``tree`` and ``lam`` is sharded
+    by ``spec``; ``lam`` holds each shard's aggregation weight (one scalar
+    per shard, weights summing to 1 across ``axis_names``).
+    """
+    from repro.fl.aggregation import hierarchical_weighted_psum
+
+    def agg_block(tree, lam):
+        return hierarchical_weighted_psum(tree, jnp.reshape(lam, ()),
+                                          axis_names)
+
+    sm = shard_map(agg_block, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=spec)
+    return jax.jit(sm)
 
 
 # ---------------------------------------------------------------------------

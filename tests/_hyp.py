@@ -1,0 +1,46 @@
+"""Degrade-to-skip guard for the optional ``hypothesis`` test dependency.
+
+``hypothesis`` ships via ``pip install -e .[test]`` (see pyproject.toml)
+but may be absent in minimal environments. Importing it unguarded made
+four test modules ERROR at collection; this shim makes them degrade the
+way ``pytest.importorskip`` would — except only the property-based tests
+skip, while plain tests in the same modules still run.
+
+Usage (instead of ``from hypothesis import given, settings, strategies``):
+
+    from _hyp import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg stub so pytest doesn't treat the hypothesis
+            # parameters as missing fixtures.
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Accepts any strategies.* call; values are never drawn."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _AnyStrategy()

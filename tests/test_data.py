@@ -1,7 +1,7 @@
 """Tests for the federated data pipeline (partitioner + pools)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to skip when hypothesis is absent
 
 from repro.data import FederatedPools, make_dataset, partition
 

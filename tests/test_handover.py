@@ -1,7 +1,7 @@
 """Tests for the space-layer handover schedule (eqs. 7-12)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to skip when hypothesis is absent
 
 from repro.core import build_default_sagin, space_latency, space_schedule
 from repro.core.latency import comp_time, handover_delay

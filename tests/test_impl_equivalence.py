@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to skip when hypothesis is absent
 
 from repro.configs import get_config
 from repro.kernels.wkv6 import ref as wkv_ref

@@ -11,7 +11,9 @@ PSUM_TEST = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map  # jax.shard_map moved across versions
     from repro.fl.aggregation import hierarchical_weighted_psum
+    from repro.launch.train import make_replica_agg_step
 
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     # each (pod, data) shard holds its own "client model" scalar
@@ -22,10 +24,16 @@ PSUM_TEST = textwrap.dedent("""
         return hierarchical_weighted_psum({"w": v}, lam,
                                           ("data", "pod"))["w"]
 
-    out = jax.jit(jax.shard_map(agg, mesh=mesh, in_specs=P("pod", "data"),
-                                out_specs=P("pod", "data")))(vals)
+    out = jax.jit(shard_map(agg, mesh=mesh, in_specs=P("pod", "data"),
+                            out_specs=P("pod", "data")))(vals)
     expected = float(np.mean(np.arange(8)))
     assert np.allclose(np.asarray(out), expected), (out, expected)
+
+    # same aggregation through the packaged shard_map helper
+    lam = jnp.full((2, 4), 1.0 / 8.0)
+    step = make_replica_agg_step(mesh, ("data", "pod"), P("pod", "data"))
+    out2 = step({"w": vals}, lam)["w"]
+    assert np.allclose(np.asarray(out2), expected), (out2, expected)
     print("PSUM_OK")
 """)
 
