@@ -39,5 +39,18 @@ def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def timeit_min(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Best-of-n microseconds per call — robust to scheduler noise, the
+    right statistic for speedup ratios of deterministic code."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def row(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,113 @@
+"""Scenario-engine scale benchmark: vectorized propagation vs seed loop.
+
+Default configuration is the acceptance scale — a 1080-satellite shell
+covering 4 regions — where the batched ``(n_regions, n_times, n_sats)``
+propagation/coverage path must beat the seed's per-satellite,
+per-region Python loop by >= 10x.  Also times an event-stepped
+multi-region engine run over the ``multi_region`` scenario preset.
+
+    PYTHONPATH=src python -m benchmarks.sim_scale [--sats N] [--regions R]
+        [--t-end SECONDS] [--smoke]
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) shrinks everything for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import row, timeit, timeit_min  # noqa: E402
+from repro.core.constellation import WalkerStar  # noqa: E402
+from repro.scenarios import get_scenario  # noqa: E402
+from repro.sim import SAGINEngine  # noqa: E402
+from repro.sim.propagation import (Region, access_intervals_loop,  # noqa: E402
+                                   access_intervals_multi)
+
+REGIONS = (Region("indiana", 40.0, -86.0), Region("nairobi", -1.3, 36.8),
+           Region("reykjavik", 64.1, -21.9), Region("sydney", -33.9, 151.2))
+
+
+def propagation_speedup(n_sats: int, n_regions: int, t_end: float,
+                        dt: float = 10.0, reps: int = 5) -> float:
+    # closest divisor of n_sats to ~40 satellites per plane
+    planes = min((p for p in range(1, n_sats + 1) if n_sats % p == 0),
+                 key=lambda p: abs(n_sats // p - 40))
+    ws = WalkerStar(n_sats=n_sats, n_planes=planes, altitude=550e3,
+                    inclination_deg=53.0)
+    regions = REGIONS[:n_regions]
+    tag = f"{n_sats}x{n_regions}"
+
+    def loop():
+        return [access_intervals_loop(ws, r.lat_deg, r.lon_deg, t_end=t_end,
+                                      dt=dt,
+                                      min_elevation_deg=r.min_elevation_deg)
+                for r in regions]
+
+    def vec():
+        return access_intervals_multi(ws, regions, t_end=t_end, dt=dt)
+
+    # equivalence guard: identical windows before timing anything
+    ref, got = loop(), vec()
+    for r, ivs in zip(regions, ref):
+        vs = got[r.name]
+        assert len(ivs) == len(vs), (r.name, len(ivs), len(vs))
+        assert all(a.sat == b.sat and a.start == b.start and a.end == b.end
+                   for a, b in zip(ivs, vs)), r.name
+
+    us_loop = timeit_min(loop, n=reps, warmup=1)
+    us_vec = timeit_min(vec, n=reps, warmup=1)
+    speedup = us_loop / us_vec
+    row(f"sim_scale.loop_{tag}", us_loop)
+    row(f"sim_scale.vectorized_{tag}", us_vec, f"speedup={speedup:.1f}x")
+    return speedup
+
+
+def engine_throughput(n_rounds: int, n_devices: int) -> None:
+    scn = get_scenario("multi_region")
+
+    def run():
+        eng = SAGINEngine(scn, seed=0, n_devices=n_devices, n_air=2)
+        eng.run(n_rounds)
+        return eng
+
+    us = timeit(run, n=1, warmup=0)
+    total_rounds = n_rounds * len(scn.regions)
+    row("sim_scale.engine_multi_region", us,
+        f"rounds={total_rounds};us_per_round={us / total_rounds:.0f}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    smoke_env = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    ap.add_argument("--sats", type=int, default=None)
+    ap.add_argument("--regions", type=int, default=None)
+    ap.add_argument("--t-end", type=float, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true", default=smoke_env,
+                    help="tiny sizes for CI")
+    args, _ = ap.parse_known_args()
+    if args.smoke:
+        n_sats, n_regions, t_end, rounds, devices = 60, 2, 1800.0, 2, 4
+    else:
+        n_sats, n_regions, t_end, rounds, devices = 1080, 4, 3600.0, 5, 10
+    n_sats = args.sats if args.sats is not None else n_sats
+    n_regions = args.regions if args.regions is not None else n_regions
+    t_end = args.t_end if args.t_end is not None else t_end
+    rounds = args.rounds if args.rounds is not None else rounds
+
+    speedup = propagation_speedup(n_sats, n_regions, t_end)
+    engine_throughput(rounds, devices)
+    if not args.smoke and speedup < 10.0:
+        # return instead of sys.exit: benchmarks.run must survive one
+        # module's failure and keep printing the remaining rows
+        print(f"sim_scale: speedup {speedup:.1f}x below the 10x target",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,10 +6,35 @@ comparing the adaptive scheme against the no-offloading baseline.
 
 Reduced defaults keep CPU runtime reasonable; raise --rounds/--devices and
 --fraction for the paper-scale experiment.
+
+Scenario registry
+-----------------
+Pass ``--scenario <name>`` to run against a named preset from
+``repro.scenarios`` instead of the bare paper constellation — e.g.
+
+    PYTHONPATH=src python examples/sagin_fl_end2end.py \
+        --scenario degraded_links --rounds 50
+
+selects the paper topology under ISL fades + weather, ``device_churn``
+adds unreliable ground devices, ``mega_constellation`` swaps in a
+1080-satellite shell, and ``multi_region`` trains one model per region
+over a shared constellation (use ``--all-regions``).  ``--list-scenarios``
+prints every registered preset.  Wall-clock/latency axes then reflect the
+*realized* (dynamics-priced) round latencies, not just the analytic plan.
 """
 import argparse
 
 from repro.fl import FLConfig, run_fl
+from repro.scenarios import get_scenario, list_scenarios
+
+
+def summarize(tag, res, rounds):
+    best = max(res.accuracies)
+    tta = res.time_to_accuracy(0.8)
+    print(f"[{tag:>14s}] {rounds} rounds | "
+          f"training time {res.times[-1]:9.0f} s | "
+          f"best acc {best:.3f} | "
+          f"time-to-80% {'%.0f s' % tta if tta else 'not reached'}")
 
 
 def main():
@@ -22,21 +47,39 @@ def main():
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--constellation", action="store_true",
                     help="drive coverage windows from Walker-Star geometry")
+    ap.add_argument("--scenario", default=None,
+                    help="named preset from repro.scenarios "
+                         "(see --list-scenarios)")
+    ap.add_argument("--all-regions", action="store_true",
+                    help="with a multi-region scenario: train one FL model "
+                         "per region over the shared constellation")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
+    if args.list_scenarios:
+        for name in list_scenarios():
+            print(f"{name:>20s}  {get_scenario(name).description}")
+        return
+
+    common = dict(dataset=args.dataset, iid=not args.noniid,
+                  n_rounds=args.rounds, n_devices=args.devices,
+                  n_air=args.air, train_fraction=args.fraction,
+                  h_local=3, eval_size=1024,
+                  use_constellation=args.constellation,
+                  scenario=args.scenario)
+
+    if args.scenario and args.all_regions:
+        from repro.sim import run_fl_all_regions
+        results = run_fl_all_regions(FLConfig(strategy="adaptive", **common),
+                                     args.scenario)
+        for region, res in results.items():
+            summarize(region, res, args.rounds)
+        return
+
     for strategy in ("adaptive", "none"):
-        cfg = FLConfig(dataset=args.dataset, iid=not args.noniid,
-                       n_rounds=args.rounds, n_devices=args.devices,
-                       n_air=args.air, train_fraction=args.fraction,
-                       strategy=strategy, h_local=3, eval_size=1024,
-                       use_constellation=args.constellation)
+        cfg = FLConfig(strategy=strategy, **common)
         res = run_fl(cfg)
-        best = max(res.accuracies)
-        tta = res.time_to_accuracy(0.8)
-        print(f"[{strategy:9s}] {args.rounds} rounds | "
-              f"training time {res.times[-1]:9.0f} s | "
-              f"best acc {best:.3f} | "
-              f"time-to-80% {'%.0f s' % tta if tta else 'not reached'}")
+        summarize(strategy, res, args.rounds)
         if strategy == "adaptive":
             p = res.layer_portions[-1]
             print(f"            final placement ground/air/space: "

@@ -11,6 +11,7 @@ from .handover import SpaceSchedule, space_latency, space_schedule
 from .offloading import (ClusterPlan, OffloadPlan, evaluate_plan,
                          optimize_offloading)
 from .scheduler import RoundRecord, SAGINOrchestrator
+from .strategies import STRATEGIES, register_strategy, resolve_strategy
 from .convergence import ConvergenceConfig, max_learning_rate, theorem1_bound
 
 __all__ = [
@@ -18,6 +19,7 @@ __all__ = [
     "build_default_sagin", "WalkerStar", "access_intervals",
     "serving_sequence", "SpaceSchedule", "space_latency", "space_schedule",
     "ClusterPlan", "OffloadPlan", "evaluate_plan", "optimize_offloading",
-    "RoundRecord", "SAGINOrchestrator", "ConvergenceConfig",
-    "max_learning_rate", "theorem1_bound",
+    "RoundRecord", "SAGINOrchestrator", "STRATEGIES", "register_strategy",
+    "resolve_strategy", "ConvergenceConfig", "max_learning_rate",
+    "theorem1_bound",
 ]

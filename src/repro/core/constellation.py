@@ -103,28 +103,16 @@ def access_intervals(constellation: WalkerStar, lat_deg: float = 40.0,
                      lon_deg: float = -86.0, t_end: float = 6 * 3600.0,
                      dt: float = 10.0,
                      min_elevation_deg: float = 15.0) -> List[AccessInterval]:
-    """MATLAB ``accessIntervals`` equivalent: per-satellite coverage windows."""
-    t = np.arange(0.0, t_end, dt)
-    elev = elevation_angles(constellation, lat_deg, lon_deg, t)
-    visible = elev >= np.deg2rad(min_elevation_deg)
-    out: List[AccessInterval] = []
-    for s in range(constellation.n_sats):
-        v = visible[:, s]
-        if not v.any():
-            continue
-        edges = np.flatnonzero(np.diff(v.astype(np.int8)))
-        starts = list(np.flatnonzero(v[1:] & ~v[:-1]) + 1)
-        ends = list(np.flatnonzero(~v[1:] & v[:-1]) + 1)
-        if v[0]:
-            starts = [0] + starts
-        if v[-1]:
-            ends = ends + [len(t) - 1]
-        del edges
-        for i0, i1 in zip(starts, ends):
-            out.append(AccessInterval(sat=s, start=float(t[i0]),
-                                      end=float(t[i1])))
-    out.sort(key=lambda iv: iv.start)
-    return out
+    """MATLAB ``accessIntervals`` equivalent: per-satellite coverage windows.
+
+    Delegates to the vectorized multi-region engine in
+    ``repro.sim.propagation`` (same boundary conventions and ordering as
+    the original per-satellite loop, which survives there as
+    ``access_intervals_loop`` for equivalence tests and benchmarks).
+    """
+    from repro.sim.propagation import access_intervals_vec
+    return access_intervals_vec(constellation, lat_deg, lon_deg, t_end=t_end,
+                                dt=dt, min_elevation_deg=min_elevation_deg)
 
 
 def serving_sequence(intervals: Sequence[AccessInterval], t0: float,

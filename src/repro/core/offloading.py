@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -368,9 +368,15 @@ def cluster_case2(sagin: SAGIN, n: int, d_a2s: float,
 # ---------------------------------------------------------------------------
 # Faithful evaluation of a cluster plan (eqs. 19, 24-25, 33-34) --------------
 # ---------------------------------------------------------------------------
-def evaluate_cluster(sagin: SAGIN, cp: ClusterPlan) -> float:
-    """tau_A,n-bar (eq. 19): completion of air node n + its devices."""
+def evaluate_cluster(sagin: SAGIN, cp: ClusterPlan,
+                     offline: Sequence[int] = ()) -> float:
+    """tau_A,n-bar (eq. 19): completion of air node n + its devices.
+
+    Devices in ``offline`` (churned out for the round) neither train nor
+    upload, so they do not bound the cluster's completion time.
+    """
     n = cp.n
+    offline = set(offline)
     air = sagin.air_nodes[n]
     ks = sagin.clusters[n]
     recv_sat = lat.tx_time(sagin.q_bits * cp.d_space_air, sagin.s2a_rate(n)) \
@@ -393,6 +399,8 @@ def evaluate_cluster(sagin: SAGIN, cp: ClusterPlan) -> float:
 
     t_ground = 0.0
     for k in ks:
+        if k in offline:
+            continue
         dev = sagin.devices[k]
         up = lat.model_upload_time(sagin.model_bits, sagin.g2a_rate(k, n))
         d_in = cp.d_air_ground.get(k, 0.0)

@@ -2,17 +2,19 @@
 together (Section III overview; Remark 1 gateway role)."""
 from __future__ import annotations
 
-import copy
 import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
 
+from . import latency as lat
 from . import network as net
-from .constellation import WalkerStar, access_intervals, serving_sequence
-from .handover import SpaceSchedule, space_schedule
+from .constellation import (AccessInterval, WalkerStar, access_intervals,
+                            serving_sequence)
+from .handover import SpaceSchedule, space_latency, space_schedule
 from .network import SAGIN, Satellite
-from .offloading import OffloadPlan, optimize_offloading
+from .offloading import OffloadPlan, evaluate_cluster
+from .strategies import resolve_strategy
 
 
 @dataclasses.dataclass
@@ -20,48 +22,78 @@ class RoundRecord:
     round_index: int
     plan: OffloadPlan
     schedule: SpaceSchedule
-    latency: float                 # realized round latency (eq. 18)
+    latency: float                 # analytic round latency (eq. 18)
     wall_clock_start: float        # cumulative time when round started
     ground_sizes: List[int]
     air_sizes: List[int]
     sat_size: int
+    realized_latency: float = 0.0  # latency after stochastic events
+    events: Optional[object] = None        # sim.dynamics.RoundEvents
+    offline_devices: tuple = ()            # churned-out this round
 
 
 class SAGINOrchestrator:
     """Simulates the full multi-round FL orchestration of the paper.
 
     Each round: (1) refresh the serving-satellite chain from the
-    constellation at the current wall-clock; (2) run the adaptive offloading
-    optimizer; (3) apply the plan (moving integer sample counts with
-    conservation repair); (4) advance the wall clock by the realized
-    latency. Strategy hooks let the baselines reuse the same machinery.
+    constellation at the current wall-clock; (2) sample this round's
+    network events (outages, weather, jitter, churn) when a dynamics
+    process is attached; (3) run the data-placement strategy hook;
+    (4) apply the plan (moving integer sample counts with conservation
+    repair); (5) advance the wall clock by the *realized* latency — the
+    plan is made against nominal rates, then re-priced under the round's
+    realized channel/ISL conditions, so dynamics hit the trajectory the
+    way unforecast weather hits a real deployment.
+
+    ``strategy`` is a registered name from ``core.strategies`` (the
+    Section VI-A schemes) or any ``(orchestrator, round) -> OffloadPlan``
+    callable.  All randomness (satellite CPU draws) flows from the
+    explicit ``rng`` generator; pass one spawned per region for
+    reproducible multi-region simulations.
     """
 
     def __init__(self, sagin: SAGIN,
                  constellation: Optional[WalkerStar] = None,
                  lat_deg: float = 40.0, lon_deg: float = -86.0,
                  sat_f_seed: int = 0, horizon: float = 48 * 3600.0,
-                 strategy: str = "adaptive"):
+                 strategy: str = "adaptive",
+                 rng: Optional[np.random.Generator] = None,
+                 dynamics: Optional[object] = None,
+                 intervals: Optional[Sequence[AccessInterval]] = None,
+                 min_elevation_deg: float = 15.0):
         self.sagin = sagin
         self.constellation = constellation
         self.strategy = strategy
+        self._strategy_fn = resolve_strategy(strategy)
         self._static_plan: Optional[OffloadPlan] = None
-        self._rng = np.random.default_rng(sat_f_seed)
+        self._rng = rng if rng is not None else np.random.default_rng(
+            sat_f_seed)
+        self.dynamics = dynamics
         self.wall_clock = 0.0
         self.records: List[RoundRecord] = []
-        if constellation is not None:
-            self._intervals = access_intervals(constellation, lat_deg,
-                                               lon_deg, t_end=horizon)
+        if intervals is not None:
+            self._intervals = list(intervals)
+        elif constellation is not None:
+            self._intervals = access_intervals(
+                constellation, lat_deg, lon_deg, t_end=horizon,
+                min_elevation_deg=min_elevation_deg)
         else:
             self._intervals = None
+        # static satellite lists keep their nominal frequencies so that
+        # per-round jitter never compounds across rounds
+        self._base_sat_f = ([s.f for s in sagin.satellites]
+                            if self._intervals is None else None)
 
     # -- satellite chain ----------------------------------------------------
     def _refresh_satellites(self):
         if self._intervals is None:
+            if self._base_sat_f is not None:
+                for sat, f in zip(self.sagin.satellites, self._base_sat_f):
+                    sat.f = f
             return  # static satellite list supplied by the user
         chain = serving_sequence(self._intervals, self.wall_clock)
         sats = []
-        for i, iv in enumerate(chain):
+        for iv in chain:
             f = float(self._rng.uniform(*net.F_SAT_RANGE))
             sats.append(Satellite(index=iv.sat, f=f,
                                   coverage_end=max(0.0,
@@ -74,122 +106,68 @@ class SAGINOrchestrator:
 
     # -- strategies ---------------------------------------------------------
     def _plan_round(self, r: int) -> OffloadPlan:
-        from .offloading import ClusterPlan
-        from .handover import space_latency
-        from . import latency as lat
-        sagin = self.sagin
-        if self.strategy == "adaptive":
-            return optimize_offloading(sagin)
-        if self.strategy == "static":
-            if self._static_plan is None:
-                self._static_plan = optimize_offloading(sagin)
-            if r == 0:
-                return self._static_plan
-            # keep datasets fixed: no further transfers
-            return self._null_plan()
-        if self.strategy == "none":
-            return self._null_plan()
-        if self.strategy == "air_ground":
-            # zero-out space transfers: per-cluster balancing only
-            from .offloading import cluster_case1
-            clusters = [cluster_case1(sagin, n, 0.0) for n in sagin.clusters]
-            plan = OffloadPlan(case=1, clusters=clusters,
-                               new_sat_samples=sagin.n_sat_samples,
-                               space_latency=space_latency(
-                                   sagin.n_sat_samples, sagin),
-                               round_latency=0.0, baseline_latency=0.0)
-            from .offloading import evaluate_plan
-            plan.round_latency = evaluate_plan(sagin, plan)
-            return plan
-        if self.strategy == "ground_space":
-            # bypass air compute: use full optimizer but forbid air nodes
-            # from keeping samples (they only relay). Implemented by
-            # temporarily zeroing air compute attractiveness.
-            saved = [a.f for a in sagin.air_nodes]
-            for a in sagin.air_nodes:
-                a.f = 1.0  # effectively no compute at air layer
-            try:
-                plan = optimize_offloading(sagin)
-            finally:
-                for a, f in zip(sagin.air_nodes, saved):
-                    a.f = f
-            return plan
-        if self.strategy == "proportional":
-            return self._proportional_plan()
-        raise ValueError(f"unknown strategy {self.strategy!r}")
+        return self._strategy_fn(self, r)
 
-    def _null_plan(self) -> OffloadPlan:
-        from .offloading import ClusterPlan, evaluate_plan
-        from .handover import space_latency
-        from . import latency as lat
-        sagin = self.sagin
-        clusters = [ClusterPlan(n=n) for n in sagin.clusters]
-        plan = OffloadPlan(case=0, clusters=clusters,
-                           new_sat_samples=sagin.n_sat_samples,
-                           space_latency=space_latency(sagin.n_sat_samples,
-                                                       sagin),
-                           round_latency=0.0, baseline_latency=0.0)
-        for cp in plan.clusters:
-            cp.latency = (lat.air_cluster_latency_no_offload(sagin, cp.n)
-                          + lat.model_upload_time(sagin.model_bits,
-                                                  sagin.a2s_rate(cp.n)))
-        plan.round_latency = evaluate_plan(sagin, plan)
-        return plan
+    # -- dynamics -----------------------------------------------------------
+    def _sample_events(self, r: int):
+        if self.dynamics is None:
+            return None
+        events = self.dynamics.sample_round(
+            r, n_sats=len(self.sagin.satellites),
+            n_clusters=len(self.sagin.clusters),
+            n_devices=len(self.sagin.devices))
+        # compute jitter is observable: the planner sees the jittered f
+        for sat, scale in zip(self.sagin.satellites, events.sat_freq_scale):
+            sat.f *= float(scale)
+        return events
 
-    def _proportional_plan(self) -> OffloadPlan:
-        """Baseline: allocation proportional to each node's compute power."""
-        from .offloading import ClusterPlan, evaluate_plan
-        from .handover import space_latency
+    def _strip_offline(self, plan: OffloadPlan, offline: Sequence[int]):
+        """Offline devices neither send nor receive data this round.
+
+        Dropping a churned device's ground->air feed can leave the air
+        node promising the satellite more than it will actually hold, so
+        the upward transfer is clamped to the realizable mass and the
+        plan's satellite target is re-derived from the surviving moves.
+        """
+        off = set(offline)
         sagin = self.sagin
-        f_sat = sagin.satellites[0].f
-        f_total = (sum(d.f for d in sagin.devices)
-                   + sum(a.f for a in sagin.air_nodes) + f_sat)
-        total = sagin.total_samples
-        # target sizes
-        tgt_sat = total * f_sat / f_total
-        clusters = []
-        sat_delta = tgt_sat - sagin.n_sat_samples
-        # distribute the satellite delta across clusters proportionally to
-        # their offloadable mass; within each cluster move between air/ground
-        offloadable = {n: sum(sagin.devices[k].n_offloadable
-                              for k in sagin.clusters[n])
-                       + sagin.air_nodes[n].n_samples
-                       for n in sagin.clusters}
-        off_total = max(1.0, sum(offloadable.values()))
-        for n in sagin.clusters:
-            cp = ClusterPlan(n=n)
-            air = sagin.air_nodes[n]
-            ks = sagin.clusters[n]
-            if sat_delta > 0:  # clusters send up
-                share = sat_delta * offloadable[n] / off_total
-                cp.d_air_space = min(share, offloadable[n])
-                # take from devices proportionally to their offloadable data
-                need = max(0.0, cp.d_air_space - air.n_samples)
-                dev_off = max(1.0, sum(sagin.devices[k].n_offloadable
-                                       for k in ks))
-                for k in ks:
-                    cp.d_ground_air[k] = (need * sagin.devices[k].n_offloadable
-                                          / dev_off)
-            else:  # satellite sends down
-                share = -sat_delta / len(sagin.clusters)
-                cp.d_space_air = share
-            # air target: proportional within cluster
-            f_cluster = air.f + sum(sagin.devices[k].f for k in ks)
-            clusters.append(cp)
-        plan = OffloadPlan(case=2 if sat_delta > 0 else 1, clusters=clusters,
-                           new_sat_samples=sagin.n_sat_samples + sum(
-                               c.d_air_space - c.d_space_air
-                               for c in clusters),
-                           space_latency=0.0, round_latency=0.0,
-                           baseline_latency=0.0)
-        plan.space_latency = space_latency(plan.new_sat_samples, sagin)
         for cp in plan.clusters:
-            from .offloading import evaluate_cluster
-            from . import latency as lat
-            cp.latency = evaluate_cluster(sagin, cp) + lat.model_upload_time(
-                sagin.model_bits, sagin.a2s_rate(cp.n))
-        plan.round_latency = evaluate_plan(sagin, plan)
-        return plan
+            cp.d_ground_air = {k: d for k, d in cp.d_ground_air.items()
+                               if k not in off}
+            cp.d_air_ground = {k: d for k, d in cp.d_air_ground.items()
+                               if k not in off}
+            realizable = (sagin.air_nodes[cp.n].n_samples + cp.d_space_air
+                          + sum(cp.d_ground_air.values())
+                          - sum(cp.d_air_ground.values()))
+            cp.d_air_space = min(cp.d_air_space, max(0.0, realizable))
+        plan.new_sat_samples = sagin.n_sat_samples + sum(
+            cp.d_air_space - cp.d_space_air for cp in plan.clusters)
+
+    def _realized_latency(self, plan: OffloadPlan, events) -> float:
+        """Re-price the committed plan under the round's realized
+        channel/ISL conditions (the planner only saw nominal rates)."""
+        if events.quiet:
+            return plan.round_latency
+        sagin = self.sagin
+        saved = (sagin._g2a, sagin._a2s, sagin._s2a, sagin.z_isl)
+        try:
+            rs = events.rate_scale
+            sagin._g2a = {k: v * rs for k, v in saved[0].items()}
+            sagin._a2s = {k: v * rs for k, v in saved[1].items()}
+            sagin._s2a = {k: v * rs for k, v in saved[2].items()}
+            sagin.z_isl = saved[3] * events.isl_scale
+            t_space = space_latency(plan.new_sat_samples, sagin)
+            t_air = 0.0
+            for cp in plan.clusters:
+                t = (evaluate_cluster(sagin, cp,
+                                      offline=events.offline_devices)
+                     + lat.model_upload_time(sagin.model_bits,
+                                             sagin.a2s_rate(cp.n))
+                     + events.uplink_delays.get(cp.n, 0.0))
+                t_air = max(t_air, t)
+            return max(t_space, t_air)
+        finally:
+            sagin._g2a, sagin._a2s, sagin._s2a, sagin.z_isl = saved
 
     # -- application --------------------------------------------------------
     def _apply_plan(self, plan: OffloadPlan):
@@ -206,7 +184,6 @@ class SAGINOrchestrator:
             a[0] += s
             s = 0
         for k, dev in enumerate(sagin.devices):
-            moved_away = dev.n_samples - g[k]
             dev.n_samples = max(dev.n_sensitive, g[k])
         for n, air in enumerate(sagin.air_nodes):
             air.n_samples = max(0, a[n])
@@ -215,19 +192,26 @@ class SAGINOrchestrator:
     # -- main loop ----------------------------------------------------------
     def step(self, r: int) -> RoundRecord:
         self._refresh_satellites()
+        events = self._sample_events(r)
         plan = self._plan_round(r)
+        if events is not None and events.offline_devices:
+            self._strip_offline(plan, events.offline_devices)
         schedule = space_schedule(plan.new_sat_samples, self.sagin)
+        realized = (plan.round_latency if events is None
+                    else self._realized_latency(plan, events))
         rec = RoundRecord(
             round_index=r, plan=plan, schedule=schedule,
             latency=plan.round_latency, wall_clock_start=self.wall_clock,
             ground_sizes=[d.n_samples for d in self.sagin.devices],
             air_sizes=[a.n_samples for a in self.sagin.air_nodes],
-            sat_size=self.sagin.n_sat_samples)
+            sat_size=self.sagin.n_sat_samples,
+            realized_latency=realized, events=events,
+            offline_devices=(events.offline_devices if events else ()))
         self._apply_plan(plan)
         rec.ground_sizes = [d.n_samples for d in self.sagin.devices]
         rec.air_sizes = [a.n_samples for a in self.sagin.air_nodes]
         rec.sat_size = self.sagin.n_sat_samples
-        self.wall_clock += plan.round_latency
+        self.wall_clock += realized
         self.records.append(rec)
         return rec
 

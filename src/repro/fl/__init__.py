@@ -1,6 +1,7 @@
 from .aggregation import (aggregation_weights, fedavg, fedavg_stacked,
                           hierarchical_weighted_psum)
-from .baselines import ALL_SCHEMES, BASELINES
+from .baselines import (ALL_SCHEMES, BASELINES, SCHEME_HOOKS,
+                        compare_schemes, run_scheme)
 from .client import (cohort_local_update, cross_entropy, evaluate,
                      local_update, masked_cross_entropy, masked_local_update,
                      vmapped_local_update)
@@ -8,6 +9,7 @@ from .rounds import FLConfig, FLResult, run_fl
 
 __all__ = ["aggregation_weights", "fedavg", "fedavg_stacked",
            "hierarchical_weighted_psum", "ALL_SCHEMES", "BASELINES",
+           "SCHEME_HOOKS", "compare_schemes", "run_scheme",
            "cohort_local_update", "cross_entropy", "evaluate",
            "local_update", "masked_cross_entropy", "masked_local_update",
            "vmapped_local_update", "FLConfig", "FLResult", "run_fl"]

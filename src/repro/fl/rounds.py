@@ -72,6 +72,8 @@ class FLConfig:
     eval_size: int = 1024
     seed: int = 0
     use_constellation: bool = False  # True: drive T_i from Walker-Star
+    scenario: Optional[str] = None   # named preset from repro.scenarios
+    region_index: int = 0            # which scenario region this FL job serves
     execution: str = "auto"        # auto|batched|sequential (module docstring)
     cohort_batch_align: int = 32   # batched mode: pad Bmax to this multiple
 
@@ -99,6 +101,51 @@ class FLResult:
         return None
 
 
+def _build_orchestrator(cfg: FLConfig, sagin: SAGIN) -> SAGINOrchestrator:
+    """Orchestrator from the config: scenario preset, bare Walker-Star, or
+    the static satellite list, in that order of precedence.
+
+    With a scenario, coverage windows come from the vectorized
+    multi-region propagation pass and the preset's stochastic dynamics
+    are attached, so the wall clock advances by *realized* latencies.
+    """
+    if cfg.scenario is not None:
+        from repro.scenarios import get_scenario
+        from repro.sim.dynamics import NetworkDynamics
+        from repro.sim.propagation import access_intervals_multi
+
+        scn = get_scenario(cfg.scenario)
+        try:
+            region = scn.regions[cfg.region_index]
+        except IndexError:
+            raise ValueError(
+                f"scenario {scn.name!r} has {len(scn.regions)} region(s); "
+                f"region_index={cfg.region_index} is out of range") from None
+        # propagate only this job's region (the engine shares one pass
+        # across regions; a single-region FL job shouldn't pay for all)
+        intervals = access_intervals_multi(
+            scn.build_constellation(), [region], t_end=scn.horizon,
+            dt=scn.dt)[region.name]
+        dynamics = None
+        if scn.dynamics is not None:
+            dynamics = NetworkDynamics(
+                scn.dynamics,
+                rng=np.random.default_rng(cfg.seed).spawn(1)[0])
+        # an explicitly non-default FLConfig.strategy wins; otherwise the
+        # scenario's declared scheme applies (as in SAGINEngine)
+        strategy = (cfg.strategy if cfg.strategy != "adaptive"
+                    else scn.strategy)
+        return SAGINOrchestrator(sagin, intervals=intervals,
+                                 rng=np.random.default_rng(cfg.seed),
+                                 dynamics=dynamics, strategy=strategy)
+    constellation = None
+    if cfg.use_constellation:
+        from repro.core import WalkerStar
+        constellation = WalkerStar()
+    return SAGINOrchestrator(sagin, constellation=constellation,
+                             sat_f_seed=cfg.seed, strategy=cfg.strategy)
+
+
 def _train_node(apply_fn, params, ds, idx, h, lr, batch_cap, rng):
     from repro.data.pipeline import batch_for_local_steps
     batches = batch_for_local_steps(ds.x_train, ds.y_train, idx, h, rng,
@@ -111,12 +158,16 @@ def _train_node(apply_fn, params, ds, idx, h, lr, batch_cap, rng):
     return new_params, float(loss)
 
 
-def _node_pools(cfg: FLConfig, pools) -> List[np.ndarray]:
+def _node_pools(cfg: FLConfig, pools, offline=()) -> List[np.ndarray]:
     """Index pools of every data-holding node, in canonical node order
     (ground 0..K-1, air 0..N-1, satellite) — the order both execution
-    modes must share for RNG-stream equivalence."""
+    modes must share for RNG-stream equivalence.  Devices churned out
+    for the round (``offline``) sit out of training entirely."""
     out = []
+    offline = set(offline)
     for k in range(cfg.n_devices):
+        if k in offline:
+            continue
         idx = pools.ground_all(k)
         if len(idx):
             out.append(idx)
@@ -186,12 +237,7 @@ def run_fl(cfg: FLConfig) -> FLResult:
         sagin.devices[k].n_samples = p.n_samples
         sagin.devices[k].n_sensitive = p.n_sensitive
 
-    constellation = None
-    if cfg.use_constellation:
-        from repro.core import WalkerStar
-        constellation = WalkerStar()
-    orch = SAGINOrchestrator(sagin, constellation=constellation,
-                             sat_f_seed=cfg.seed, strategy=cfg.strategy)
+    orch = _build_orchestrator(cfg, sagin)
 
     execution = cfg.resolved_execution()
     if execution not in ("batched", "sequential"):
@@ -213,7 +259,7 @@ def run_fl(cfg: FLConfig) -> FLResult:
 
         # ---- local training at every node that holds data ----------------
         total = pools.total()
-        node_pools = _node_pools(cfg, pools)
+        node_pools = _node_pools(cfg, pools, offline=rec.offline_devices)
         if execution == "batched":
             params, losses = _round_batched(cfg, apply_fn, params, ds,
                                             node_pools, total, rng)
@@ -225,7 +271,7 @@ def run_fl(cfg: FLConfig) -> FLResult:
         result.times.append(orch.wall_clock)
         result.accuracies.append(float(acc))
         result.losses.append(float(np.mean(losses)) if losses else float(loss))
-        result.latencies.append(rec.latency)
+        result.latencies.append(rec.realized_latency)
         result.cases.append(rec.plan.case)
         n_ground = sum(len(pools.ground_all(k)) for k in range(cfg.n_devices))
         n_air = sum(len(a) for a in pools.air)

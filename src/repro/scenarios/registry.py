@@ -1,0 +1,139 @@
+"""Named SAGIN scenario presets: constellation + regions + dynamics.
+
+A :class:`Scenario` is the single declarative object from which
+examples, tests, and benchmarks construct a full simulation — the
+"as many scenarios as you can imagine" axis of the roadmap.  Presets
+ship for the paper's exact setup, a mega-constellation, a multi-region
+deployment, degraded links, and device churn; new scenarios register
+with :func:`register` (or :func:`scenario`, its decorator form for
+lazily-built variants).
+
+    from repro.scenarios import get_scenario
+    scn = get_scenario("multi_region")
+    engine = SAGINEngine(scn, seed=0)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.constellation import AccessInterval, WalkerStar
+from repro.sim.dynamics import DynamicsConfig
+from repro.sim.propagation import Region, access_intervals_multi
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative description of one SAGIN FL deployment."""
+    name: str
+    description: str
+    # constellation ---------------------------------------------------------
+    n_sats: int = 80
+    n_planes: int = 5
+    altitude: float = 800e3
+    inclination_deg: float = 85.0
+    phasing: int = 1
+    # regions ---------------------------------------------------------------
+    regions: Tuple[Region, ...] = (Region("indiana", 40.0, -86.0),)
+    # per-region network population (engine defaults; FLConfig may override)
+    n_devices: int = 50
+    n_air: int = 5
+    samples_per_device: int = 1200
+    alpha: float = 0.8
+    strategy: str = "adaptive"
+    # dynamics --------------------------------------------------------------
+    dynamics: Optional[DynamicsConfig] = None
+    # propagation window ----------------------------------------------------
+    horizon: float = 48 * 3600.0
+    dt: float = 10.0
+
+    def build_constellation(self) -> WalkerStar:
+        if self.n_sats % self.n_planes:
+            raise ValueError(f"{self.name}: n_sats={self.n_sats} not "
+                             f"divisible by n_planes={self.n_planes}")
+        return WalkerStar(n_sats=self.n_sats, n_planes=self.n_planes,
+                          altitude=self.altitude,
+                          inclination_deg=self.inclination_deg,
+                          phasing=self.phasing)
+
+    def build_intervals(self, backend: str = "numpy"
+                        ) -> Dict[str, List[AccessInterval]]:
+        """Coverage windows for every region from one shared propagation.
+
+        NumPy (float64) by default so window boundaries are host-
+        independent; see ``access_intervals_multi`` for the jax opt-in.
+        """
+        return access_intervals_multi(self.build_constellation(),
+                                      self.regions, t_end=self.horizon,
+                                      dt=self.dt, backend=backend)
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(scn: Scenario) -> Scenario:
+    if scn.name in SCENARIOS:
+        raise ValueError(f"scenario {scn.name!r} already registered")
+    SCENARIOS[scn.name] = scn
+    return scn
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; available: "
+                         f"{sorted(SCENARIOS)}") from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Presets --------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+register(Scenario(
+    name="paper",
+    description="The paper's Section VI-A setup: 80-sat Walker-Star over "
+                "one Indiana target region, deterministic network.",
+))
+
+register(Scenario(
+    name="mega_constellation",
+    description="Starlink-class shell: 1080 satellites in 27 planes at "
+                "550 km / 53 deg serving two mid-latitude regions.",
+    n_sats=1080, n_planes=27, altitude=550e3, inclination_deg=53.0,
+    regions=(Region("indiana", 40.0, -86.0),
+             Region("catalonia", 41.4, 2.2)),
+    horizon=6 * 3600.0, dt=10.0,
+))
+
+register(Scenario(
+    name="multi_region",
+    description="One shared 80-sat constellation orchestrating four "
+                "independent FL regions across four continents.",
+    regions=(Region("indiana", 40.0, -86.0),
+             Region("nairobi", -1.3, 36.8),
+             Region("reykjavik", 64.1, -21.9),
+             Region("sydney", -33.9, 151.2)),
+    n_devices=20, n_air=2,
+    horizon=24 * 3600.0,
+))
+
+register(Scenario(
+    name="degraded_links",
+    description="Paper topology under hostile links: frequent ISL fades, "
+                "per-cluster uplink outages, heavy weather on rates.",
+    dynamics=DynamicsConfig(isl_outage_prob=0.3, isl_outage_scale=0.25,
+                            uplink_outage_prob=0.2,
+                            uplink_outage_delay=30.0,
+                            weather_std=0.3),
+))
+
+register(Scenario(
+    name="device_churn",
+    description="Paper topology with unreliable ground devices (20% "
+                "offline per round) and satellite compute jitter.",
+    dynamics=DynamicsConfig(churn_prob=0.2, sat_freq_jitter_std=0.2),
+))

@@ -1,0 +1,15 @@
+"""Vectorized SAGIN dynamics simulator: propagation, stochastic network
+events, and the event-stepped multi-region engine."""
+from .dynamics import DynamicsConfig, NetworkDynamics, RoundEvents
+from .engine import RegionTrace, SAGINEngine, run_fl_all_regions
+from .propagation import (Region, access_intervals_loop,
+                          access_intervals_multi, access_intervals_vec,
+                          coverage_dot_threshold, positions_eci_batch,
+                          sin_elevations, targets_eci_batch, visibility)
+
+__all__ = ["DynamicsConfig", "NetworkDynamics", "RoundEvents",
+           "RegionTrace", "SAGINEngine", "run_fl_all_regions", "Region",
+           "access_intervals_loop", "access_intervals_multi",
+           "access_intervals_vec", "coverage_dot_threshold",
+           "positions_eci_batch", "sin_elevations", "targets_eci_batch",
+           "visibility"]

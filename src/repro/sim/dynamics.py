@@ -1,0 +1,109 @@
+"""Stochastic SAGIN network dynamics: outages, weather, jitter, churn.
+
+The seed's round model is purely analytic and deterministic; this module
+adds the event processes that make a scenario *dynamic*:
+
+* **ISL outages** — with probability ``isl_outage_prob`` per round the
+  inter-satellite link degrades to ``isl_outage_scale`` of its nominal
+  rate (rain fade / pointing loss on the optical/Ka link), stretching
+  every handover in that round.
+* **Uplink outages** — per cluster, the air->space uplink suffers a
+  dead-air window of ``uplink_outage_delay`` seconds with probability
+  ``uplink_outage_prob`` (blockage, beam re-acquisition).
+* **Weather attenuation** — a lognormal multiplicative factor with
+  sigma ``weather_std`` on all ground/air channel rates for the round.
+* **Satellite compute jitter** — lognormal factor with sigma
+  ``sat_freq_jitter_std`` on each serving satellite's CPU frequency
+  (thermal throttling, shared payloads).  Unlike the other processes
+  this one is *observable*: the orchestrator refreshes satellite state
+  every round anyway, so the planner sees the jittered frequency.
+* **Device churn** — each ground device is offline for the round with
+  probability ``churn_prob``; offline devices neither move data nor
+  train.
+
+Every process draws from one explicit :class:`numpy.random.Generator`
+threaded through the constructor — identical seeds give identical
+multi-round event trajectories, and the engine derives independent
+per-region streams with :meth:`NetworkDynamics.spawn`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicsConfig:
+    """Per-round event-process rates; all zero means static (seed) behavior."""
+    isl_outage_prob: float = 0.0
+    isl_outage_scale: float = 0.25      # z_isl multiplier while degraded
+    uplink_outage_prob: float = 0.0     # per cluster, per round
+    uplink_outage_delay: float = 20.0   # seconds of dead air per outage
+    weather_std: float = 0.0            # lognormal sigma on channel rates
+    sat_freq_jitter_std: float = 0.0    # lognormal sigma on satellite f
+    churn_prob: float = 0.0             # per ground device, per round
+
+    def any_active(self) -> bool:
+        return (self.isl_outage_prob > 0 or self.uplink_outage_prob > 0
+                or self.weather_std > 0 or self.sat_freq_jitter_std > 0
+                or self.churn_prob > 0)
+
+
+@dataclasses.dataclass
+class RoundEvents:
+    """Realized events for one global round."""
+    round_index: int
+    sat_freq_scale: np.ndarray          # (n_sats,) observable at planning
+    isl_scale: float = 1.0              # z_isl multiplier (<1 during outage)
+    rate_scale: float = 1.0             # weather multiplier on channel rates
+    uplink_delays: Dict[int, float] = dataclasses.field(default_factory=dict)
+    offline_devices: Tuple[int, ...] = ()
+
+    @property
+    def quiet(self) -> bool:
+        """True when no *unobservable* perturbation realized this round.
+
+        Satellite compute jitter is deliberately excluded: it is applied
+        to the satellites before planning, so the plan already prices it
+        and re-pricing the round would return the analytic latency.
+        """
+        return (self.isl_scale == 1.0 and self.rate_scale == 1.0
+                and not self.uplink_delays and not self.offline_devices)
+
+
+class NetworkDynamics:
+    """Samples :class:`RoundEvents` from an explicit, threaded RNG."""
+
+    def __init__(self, config: DynamicsConfig,
+                 rng: Optional[np.random.Generator] = None, seed: int = 0):
+        self.config = config
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+
+    def spawn(self) -> "NetworkDynamics":
+        """Independent child stream (one per region in the engine)."""
+        return NetworkDynamics(self.config, rng=self.rng.spawn(1)[0])
+
+    def sample_round(self, r: int, n_sats: int, n_clusters: int,
+                     n_devices: int) -> RoundEvents:
+        cfg = self.config
+        rng = self.rng
+        ev = RoundEvents(round_index=r, sat_freq_scale=np.ones(n_sats))
+        if cfg.sat_freq_jitter_std > 0:
+            ev.sat_freq_scale = rng.lognormal(
+                mean=-0.5 * cfg.sat_freq_jitter_std ** 2,
+                sigma=cfg.sat_freq_jitter_std, size=n_sats)
+        if cfg.isl_outage_prob > 0 and rng.random() < cfg.isl_outage_prob:
+            ev.isl_scale = cfg.isl_outage_scale
+        if cfg.weather_std > 0:
+            ev.rate_scale = float(rng.lognormal(
+                mean=-0.5 * cfg.weather_std ** 2, sigma=cfg.weather_std))
+        if cfg.uplink_outage_prob > 0:
+            hit = rng.random(n_clusters) < cfg.uplink_outage_prob
+            ev.uplink_delays = {int(n): cfg.uplink_outage_delay
+                                for n in np.flatnonzero(hit)}
+        if cfg.churn_prob > 0:
+            off = rng.random(n_devices) < cfg.churn_prob
+            ev.offline_devices = tuple(int(k) for k in np.flatnonzero(off))
+        return ev

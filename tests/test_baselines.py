@@ -1,0 +1,62 @@
+"""Smoke tests: every Section VI-A scheme is an executable data-placement
+policy wired through the strategy registry."""
+import numpy as np
+import pytest
+
+from repro.core import SAGINOrchestrator, build_default_sagin
+from repro.core.offloading import OffloadPlan
+from repro.core.strategies import STRATEGIES, null_plan, resolve_strategy
+from repro.fl.baselines import (ALL_SCHEMES, BASELINES, SCHEME_HOOKS,
+                                compare_schemes, run_scheme)
+
+
+def test_every_scheme_maps_to_a_hook():
+    assert set(ALL_SCHEMES) == set(BASELINES) | {"adaptive"}
+    for name in ALL_SCHEMES:
+        hook = SCHEME_HOOKS[name]
+        assert callable(hook)
+        assert resolve_strategy(name) is hook
+        assert STRATEGIES[name] is hook
+
+
+def test_all_six_schemes_run_end_to_end():
+    lats = compare_schemes(n_rounds=2, n_devices=6, n_air=2, seed=0)
+    assert set(lats) == set(ALL_SCHEMES)
+    for name, values in lats.items():
+        assert len(values) == 2
+        assert all(np.isfinite(v) and v > 0 for v in values), name
+    # the proposed scheme must not lose to any baseline in round 0
+    for name in BASELINES:
+        assert lats["adaptive"][0] <= lats[name][0] + 1e-6, name
+
+
+def test_run_scheme_records_are_complete():
+    recs = run_scheme("air_ground", n_rounds=3, n_devices=6, n_air=2)
+    assert len(recs) == 3
+    for rec in recs:
+        assert isinstance(rec.plan, OffloadPlan)
+        # air_ground never touches the space layer
+        for cp in rec.plan.clusters:
+            assert cp.d_air_space == 0.0
+            assert cp.d_space_air == 0.0
+
+
+def test_unknown_strategy_raises():
+    sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        SAGINOrchestrator(sagin, strategy="nope")
+
+
+def test_custom_callable_strategy():
+    """Any (orchestrator, round) -> OffloadPlan callable is a policy."""
+    sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
+    calls = []
+
+    def policy(orch, r):
+        calls.append(r)
+        return null_plan(orch.sagin)
+
+    orch = SAGINOrchestrator(sagin, strategy=policy)
+    recs = orch.run(2)
+    assert calls == [0, 1]
+    assert all(r.plan.case == 0 for r in recs)

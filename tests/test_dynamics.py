@@ -1,0 +1,127 @@
+"""Tests for stochastic network dynamics and their orchestrator coupling:
+reproducibility, realized-vs-analytic latency, churn conservation."""
+import numpy as np
+import pytest
+
+from repro.core import SAGINOrchestrator, build_default_sagin
+from repro.core.network import Satellite
+from repro.sim.dynamics import DynamicsConfig, NetworkDynamics, RoundEvents
+
+FULL = DynamicsConfig(isl_outage_prob=0.5, uplink_outage_prob=0.5,
+                      uplink_outage_delay=25.0, weather_std=0.4,
+                      sat_freq_jitter_std=0.3, churn_prob=0.3)
+
+
+def sample_trajectory(seed, n_rounds=6):
+    dyn = NetworkDynamics(FULL, rng=np.random.default_rng(seed))
+    return [dyn.sample_round(r, n_sats=3, n_clusters=2, n_devices=8)
+            for r in range(n_rounds)]
+
+
+def test_identical_seeds_identical_events():
+    a, b = sample_trajectory(7), sample_trajectory(7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.sat_freq_scale, y.sat_freq_scale)
+        assert x.isl_scale == y.isl_scale
+        assert x.rate_scale == y.rate_scale
+        assert x.uplink_delays == y.uplink_delays
+        assert x.offline_devices == y.offline_devices
+
+
+def test_different_seeds_differ():
+    a, b = sample_trajectory(1), sample_trajectory(2)
+    assert any(x.rate_scale != y.rate_scale for x, y in zip(a, b))
+
+
+def test_spawned_streams_are_independent():
+    root = NetworkDynamics(FULL, seed=0)
+    c1, c2 = root.spawn(), root.spawn()
+    e1 = c1.sample_round(0, 3, 2, 8)
+    e2 = c2.sample_round(0, 3, 2, 8)
+    assert not np.array_equal(e1.sat_freq_scale, e2.sat_freq_scale)
+
+
+def test_zero_config_is_quiet():
+    dyn = NetworkDynamics(DynamicsConfig(), seed=0)
+    ev = dyn.sample_round(0, n_sats=2, n_clusters=2, n_devices=4)
+    assert ev.quiet
+    assert not DynamicsConfig().any_active()
+    assert FULL.any_active()
+
+
+def test_orchestrator_reproducible_under_dynamics():
+    def traj(seed):
+        sagin = build_default_sagin(n_devices=6, n_air=2, seed=0)
+        orch = SAGINOrchestrator(
+            sagin, rng=np.random.default_rng(seed),
+            dynamics=NetworkDynamics(FULL, rng=np.random.default_rng(seed)))
+        return [r.realized_latency for r in orch.run(5)]
+
+    assert traj(3) == traj(3)
+    assert traj(3) != traj(4)
+
+
+def test_uplink_outage_adds_realized_delay():
+    sagin = build_default_sagin(n_devices=6, n_air=2, seed=0)
+    cfg = DynamicsConfig(uplink_outage_prob=1.0, uplink_outage_delay=40.0)
+    orch = SAGINOrchestrator(sagin, dynamics=NetworkDynamics(cfg, seed=0))
+    rec = orch.step(0)
+    # every cluster hit by a 40 s dead-air window: realized > analytic
+    # unless the space layer dominates the round
+    assert rec.realized_latency >= rec.latency
+    assert rec.events is not None and rec.events.uplink_delays
+
+
+def test_isl_outage_stretches_space_bound_round():
+    sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
+    sagin.n_sat_samples = 50000  # space layer dominates
+    sagin.satellites = [Satellite(0, f=1e9, coverage_end=100.0),
+                        Satellite(1, f=1e9, coverage_end=np.inf)]
+    cfg = DynamicsConfig(isl_outage_prob=1.0, isl_outage_scale=0.1)
+    orch = SAGINOrchestrator(sagin, strategy="none",
+                             dynamics=NetworkDynamics(cfg, seed=0))
+    rec = orch.step(0)
+    assert rec.realized_latency > rec.latency
+
+
+def test_churn_preserves_sample_conservation():
+    sagin = build_default_sagin(n_devices=8, n_air=2, seed=0)
+    total = sagin.total_samples
+    cfg = DynamicsConfig(churn_prob=0.5)
+    orch = SAGINOrchestrator(sagin, dynamics=NetworkDynamics(cfg, seed=1))
+    offline_seen = False
+    for rec in orch.run(5):
+        assert (sum(rec.ground_sizes) + sum(rec.air_sizes) + rec.sat_size
+                == total)
+        offline_seen = offline_seen or bool(rec.offline_devices)
+        # stripped plans never move data for offline devices
+        for cp in rec.plan.clusters:
+            for k in rec.offline_devices:
+                assert k not in cp.d_ground_air
+                assert k not in cp.d_air_ground
+    assert offline_seen
+
+
+def test_static_satellite_jitter_does_not_compound():
+    """With a user-supplied satellite list, per-round compute jitter must
+    apply to the nominal frequency, not accumulate round over round."""
+    sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
+    sagin.satellites = [Satellite(0, f=5e9, coverage_end=np.inf)]
+    cfg = DynamicsConfig(sat_freq_jitter_std=0.5)
+    orch = SAGINOrchestrator(sagin, dynamics=NetworkDynamics(cfg, seed=0))
+    scales = []
+    for r in range(30):
+        orch.step(r)
+        scales.append(sagin.satellites[0].f / 5e9)
+    # lognormal(-sigma^2/2, sigma) has mean 1: compounding would drift the
+    # product toward 0; independent per-round draws keep it near 1
+    assert 0.2 < np.median(scales) < 3.0
+
+
+def test_quiet_events_leave_latency_untouched():
+    sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
+    orch = SAGINOrchestrator(
+        sagin, dynamics=NetworkDynamics(DynamicsConfig(), seed=0))
+    rec = orch.step(0)
+    assert rec.realized_latency == rec.latency
+    assert isinstance(rec.events, RoundEvents) and rec.events.quiet

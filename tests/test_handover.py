@@ -56,6 +56,53 @@ def test_zero_samples():
     assert space_latency(0, s) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# Edge cases -----------------------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_zero_length_coverage_window():
+    """A satellite whose window has already closed processes nothing and
+    hands everything straight on."""
+    s = sagin_with([Satellite(0, f=5e9, coverage_end=0.0),
+                    Satellite(1, f=5e9, coverage_end=np.inf)])
+    sch = space_schedule(1000, s)
+    assert sch.completed
+    assert sch.legs[0].samples_processed == 0.0
+    assert sch.legs[0].end_time == 0.0
+    assert abs(sch.legs[1].samples_processed - 1000) < 1e-9
+    # the full dataset pays the eq.-(7) handover to satellite 1
+    expected = handover_delay(s.model_bits, s.q_bits, 1000, s.z_isl)
+    assert abs(sch.legs[1].handover_delay - expected) < 1e-9
+
+
+def test_chain_never_completes_extrapolates_virtual_satellite():
+    """When every known satellite's window closes before the work is done,
+    the schedule finishes on the unbounded virtual satellite (index -1)
+    so the optimizer always sees a finite, monotone latency."""
+    s = sagin_with([Satellite(0, f=1e9, coverage_end=10.0),
+                    Satellite(1, f=1e9, coverage_end=20.0)])
+    n = 10_000_000  # far more than both windows can process
+    sch = space_schedule(n, s)
+    assert sch.completed
+    assert sch.legs[-1].sat_index == -1
+    assert np.isfinite(sch.total_latency)
+    assert abs(sum(l.samples_processed for l in sch.legs) - n) < 1e-6
+    # real satellites stopped at their coverage ends
+    for leg, sat in zip(sch.legs[:-1], s.satellites):
+        assert leg.end_time <= sat.coverage_end + 1e-9
+    # still monotone in n at the extrapolated tail
+    assert space_latency(n + 1000, s) >= sch.total_latency - 1e-9
+
+
+def test_single_satellite_schedule_has_no_handover():
+    s = sagin_with([Satellite(0, f=5e9, coverage_end=np.inf)])
+    sch = space_schedule(1000, s)
+    assert sch.completed
+    assert len(sch.legs) == 1
+    assert sch.n_handovers == 0
+    assert sch.legs[0].handover_delay == 0.0
+    assert sch.legs[0].start_time == 0.0
+
+
 @settings(max_examples=30, deadline=None)
 @given(n=st.integers(1, 50_000),
        f1=st.floats(1e9, 1e10), f2=st.floats(1e9, 1e10),

@@ -1,0 +1,120 @@
+"""Tests for the scenario registry and the multi-region engine: preset
+integrity, seed-path equivalence, event-stepped determinism, and every
+registry scenario end-to-end through run_fl."""
+import numpy as np
+import pytest
+
+from repro.core import SAGINOrchestrator, WalkerStar, build_default_sagin
+from repro.fl import FLConfig, run_fl
+from repro.scenarios import (SCENARIOS, Scenario, get_scenario,
+                             list_scenarios)
+from repro.sim import Region, SAGINEngine, access_intervals_loop
+
+TINY = dict(dataset="mnist", n_rounds=2, n_devices=4, n_air=1, h_local=1,
+            train_fraction=0.005, eval_size=64, seed=0)
+
+
+def test_registry_contents():
+    names = list_scenarios()
+    assert len(names) >= 5
+    for required in ("paper", "mega_constellation", "multi_region",
+                     "degraded_links", "device_churn"):
+        assert required in names
+        scn = get_scenario(required)
+        assert scn.description
+        scn.build_constellation()  # constructible
+    assert get_scenario("mega_constellation").n_sats >= 1000
+    assert len(get_scenario("multi_region").regions) >= 3
+    assert get_scenario("degraded_links").dynamics.any_active()
+    assert get_scenario("device_churn").dynamics.churn_prob > 0
+
+
+def test_unknown_scenario_raises_with_listing():
+    with pytest.raises(ValueError, match="mega_constellation"):
+        get_scenario("does_not_exist")
+
+
+def test_duplicate_registration_rejected():
+    from repro.scenarios import register
+    with pytest.raises(ValueError):
+        register(Scenario(name="paper", description="dup"))
+
+
+def test_indivisible_constellation_rejected():
+    scn = Scenario(name="_bad", description="x", n_sats=81, n_planes=5)
+    with pytest.raises(ValueError, match="divisible"):
+        scn.build_constellation()
+
+
+def test_paper_scenario_matches_seed_orchestrator():
+    """Acceptance equivalence: the `paper` preset reproduces the seed
+    orchestrator's (loop-propagated Walker-Star) round latencies."""
+    scn = get_scenario("paper")
+    region = scn.regions[0]
+    intervals = scn.build_intervals()[region.name]
+    seed_intervals = access_intervals_loop(
+        WalkerStar(), region.lat_deg, region.lon_deg, t_end=scn.horizon,
+        dt=scn.dt, min_elevation_deg=region.min_elevation_deg)
+
+    def latencies(ivs):
+        sagin = build_default_sagin(n_devices=6, n_air=2, seed=0)
+        orch = SAGINOrchestrator(sagin, intervals=ivs,
+                                 rng=np.random.default_rng(0))
+        return [r.latency for r in orch.run(4)]
+
+    np.testing.assert_allclose(latencies(intervals),
+                               latencies(seed_intervals), rtol=1e-9)
+
+
+def test_engine_event_stepped_order_and_determinism():
+    eng = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    traces = eng.run(3)
+    assert len(traces) == len(get_scenario("multi_region").regions)
+    for trace in traces:
+        assert len(trace.records) == 3
+        assert trace.wall_clock == pytest.approx(
+            sum(trace.realized_latencies))
+    eng2 = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    for a, b in zip(traces, eng2.run(3)):
+        assert a.realized_latencies == b.realized_latencies
+    summary = eng.summary()
+    assert set(summary) == {t.region.name for t in traces}
+
+
+def test_engine_shares_one_constellation():
+    eng = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    assert eng.constellation.n_sats == 80
+    assert set(eng.intervals) == {r.name
+                                  for r in eng.scenario.regions}
+    # per-region windows really differ (different geometry)
+    starts = {name: tuple(iv.start for iv in ivs[:5])
+              for name, ivs in eng.intervals.items()}
+    assert len(set(starts.values())) > 1
+
+
+def test_degraded_links_engine_realizes_overhead():
+    eng = SAGINEngine("degraded_links", seed=2, n_devices=4, n_air=1)
+    trace = eng.run(5)[0]
+    assert any(r.realized_latency != r.latency for r in trace.records)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_every_scenario_runs_end_to_end_through_run_fl(name):
+    res = run_fl(FLConfig(scenario=name, **TINY))
+    assert len(res.accuracies) == TINY["n_rounds"]
+    assert all(np.isfinite(res.latencies))
+    assert all(lat > 0 for lat in res.latencies)
+    # wall clock advances by realized latencies
+    assert res.times[-1] == pytest.approx(sum(res.latencies))
+
+
+def test_run_fl_paper_scenario_equals_constellation_path():
+    a = run_fl(FLConfig(use_constellation=True, **TINY))
+    b = run_fl(FLConfig(scenario="paper", **TINY))
+    np.testing.assert_allclose(a.latencies, b.latencies, rtol=1e-9)
+    np.testing.assert_allclose(a.accuracies, b.accuracies, rtol=1e-6)
+
+
+def test_run_fl_region_index_out_of_range():
+    with pytest.raises(ValueError, match="region_index"):
+        run_fl(FLConfig(scenario="paper", region_index=3, **TINY))
