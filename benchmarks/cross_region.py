@@ -1,0 +1,114 @@
+"""Cross-region hierarchical FL benchmark: global merge vs independence.
+
+Event-steps the full ``multi_region`` training engine twice — once with
+the scenario's staleness-aware global merge over the ISLs, once with
+merging disabled (independent per-region models) — and reports:
+
+* wall time per engine round in both modes (the merge's compute cost),
+* the simulated ISL overhead the merges add to the regions' clocks,
+* final shared-eval accuracy of the global model vs the best and mean
+  independent region model (the accuracy return on the ISL traffic).
+
+    PYTHONPATH=src python -m benchmarks.cross_region [--smoke]
+        [--rounds N] [--regions R] [--merge-every K]
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) shrinks everything for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import row, timeit  # noqa: E402
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import make_dataset
+    from repro.fl import FLConfig
+    from repro.fl.client import evaluate, stacked_evaluate
+    from repro.scenarios import get_scenario
+    from repro.sim import SAGINEngine
+
+    ap = argparse.ArgumentParser()
+    smoke_env = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    ap.add_argument("--smoke", action="store_true", default=smoke_env,
+                    help="tiny sizes for CI")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--regions", type=int, default=None)
+    ap.add_argument("--merge-every", type=int, default=None,
+                    help="override the merge cadence (0 disables merging)")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        rounds, n_regions, fraction, devices = 2, 2, 0.005, 3
+    else:
+        rounds, n_regions, fraction, devices = 6, 4, 0.01, 4
+    rounds = args.rounds if args.rounds is not None else rounds
+    n_regions = args.regions if args.regions is not None else n_regions
+
+    scn = get_scenario("multi_region")
+    scn = dataclasses.replace(scn, regions=scn.regions[:n_regions])
+    if args.merge_every is not None:
+        scn = dataclasses.replace(scn, merge_every=args.merge_every or None)
+    cfg = FLConfig(dataset="mnist", n_devices=devices, n_air=1, h_local=2,
+                   train_fraction=fraction, eval_size=128, seed=0)
+    tag = f"{n_regions}rx{rounds}"
+
+    engines = {}
+
+    def run_mode(merge_every):
+        eng = SAGINEngine(dataclasses.replace(scn, merge_every=merge_every),
+                          fl=cfg)
+        eng.run(rounds)
+        return eng
+
+    us_global = timeit(lambda: engines.setdefault(
+        "global", run_mode(scn.merge_every)), n=1, warmup=0)
+    us_indep = timeit(lambda: engines.setdefault(
+        "indep", run_mode(None)), n=1, warmup=0)
+    total_rounds = rounds * n_regions
+    isl_overhead = sum(sum(m.isl_costs) for m in engines["global"].merges)
+    row(f"cross_region.global_{tag}", us_global,
+        f"us_per_round={us_global / total_rounds:.0f};"
+        f"merges={len(engines['global'].merges)};"
+        f"isl_overhead_s={isl_overhead:.1f}")
+    row(f"cross_region.independent_{tag}", us_indep,
+        f"us_per_round={us_indep / total_rounds:.0f}")
+
+    # shared eval: a fresh sample draw of the same task, unseen by any
+    # region, scoring the one global model against every independent one
+    g_params = engines["global"].global_params
+    if g_params is None:  # --merge-every 0: nothing global to score
+        row(f"cross_region.shared_eval_{tag}", 0.0, "merging_disabled")
+        return 0
+    ds = make_dataset("mnist", seed=cfg.seed, train_fraction=0.02,
+                      sample_seed=10 ** 6)
+    n_eval = 512 if args.smoke else 1024
+    x = jnp.asarray(ds.x_test[:n_eval])
+    y = jnp.asarray(ds.y_test[:n_eval])
+    apply_fn = engines["global"].trainers[0].apply_fn
+    _, g_acc = evaluate(apply_fn, g_params, x, y)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[t.params for t in engines["indep"].trainers])
+    _, ind = stacked_evaluate(apply_fn, stacked, x, y)
+    best, mean = float(jnp.max(ind)), float(jnp.mean(ind))
+    row(f"cross_region.shared_eval_{tag}", 0.0,
+        f"global_acc={float(g_acc):.3f};best_indep={best:.3f};"
+        f"mean_indep={mean:.3f}")
+    if not args.smoke and float(g_acc) < best:
+        print(f"cross_region: global model acc {float(g_acc):.3f} below "
+              f"best independent {best:.3f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,12 +12,13 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (cohort_scaling, complexity, convergence_bound,
-                   fig4_time_to_accuracy, fig5_compute_ablation,
-                   fig6_alpha_sweep, fig7_pathloss, fl_payload_scaling,
-                   handover_dynamics, kernels_micro, roofline_report,
-                   sim_scale)
+                   cross_region, fig4_time_to_accuracy,
+                   fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
+                   fl_payload_scaling, handover_dynamics, kernels_micro,
+                   roofline_report, sim_scale)
     modules = [
         ("sim_scale", sim_scale),
+        ("cross_region", cross_region),
         ("cohort_scaling", cohort_scaling),
         ("fig5_compute_ablation", fig5_compute_ablation),
         ("handover_dynamics", handover_dynamics),

@@ -17,12 +17,26 @@ Pass ``--scenario <name>`` to run against a named preset from
 
 selects the paper topology under ISL fades + weather, ``device_churn``
 adds unreliable ground devices, ``mega_constellation`` swaps in a
-1080-satellite shell, and ``multi_region`` trains one model per region
-over a shared constellation (use ``--all-regions``).  ``--list-scenarios``
-prints every registered preset.  Wall-clock/latency axes then reflect the
-*realized* (dynamics-priced) round latencies, not just the analytic plan.
+1080-satellite shell, and ``multi_region`` spans four continents over a
+shared constellation.  ``--list-scenarios`` prints every registered
+preset.  Wall-clock/latency axes then reflect the *realized*
+(dynamics-priced) round latencies, not just the analytic plan.
+
+Multi-region modes
+------------------
+``--all-regions`` trains one INDEPENDENT model per region (the PR-2
+behavior).  ``--global-model`` instead event-steps every region through
+``SAGINEngine`` and merges the region models into ONE global model over
+the inter-satellite links at the scenario's merge cadence, with
+staleness-discounted weights (regions reach merge barriers at different
+wall times); ``--merge-every N`` overrides the cadence (0 disables
+merging).  Example:
+
+    PYTHONPATH=src python examples/sagin_fl_end2end.py \
+        --scenario multi_region --global-model --rounds 20
 """
 import argparse
+import dataclasses
 
 from repro.fl import FLConfig, run_fl
 from repro.scenarios import get_scenario, list_scenarios
@@ -51,8 +65,16 @@ def main():
                     help="named preset from repro.scenarios "
                          "(see --list-scenarios)")
     ap.add_argument("--all-regions", action="store_true",
-                    help="with a multi-region scenario: train one FL model "
-                         "per region over the shared constellation")
+                    help="with a multi-region scenario: train one "
+                         "INDEPENDENT FL model per region over the shared "
+                         "constellation")
+    ap.add_argument("--global-model", action="store_true",
+                    help="with a multi-region scenario: merge region "
+                         "models into ONE global model over the ISLs at "
+                         "the scenario's merge cadence")
+    ap.add_argument("--merge-every", type=int, default=None,
+                    help="override the scenario's merge cadence in rounds "
+                         "(0 disables merging)")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -67,6 +89,26 @@ def main():
                   h_local=3, eval_size=1024,
                   use_constellation=args.constellation,
                   scenario=args.scenario)
+
+    if args.scenario and args.global_model:
+        from repro.sim import SAGINEngine
+        scn = get_scenario(args.scenario)
+        if args.merge_every is not None:
+            scn = dataclasses.replace(
+                scn, merge_every=args.merge_every or None)
+        eng = SAGINEngine(scn, fl=FLConfig(strategy="adaptive", **common))
+        eng.run(args.rounds)
+        for region, res in eng.fl_results.items():
+            summarize(region, res, args.rounds)
+        for m in eng.merges:
+            stale = max(m.staleness)
+            print(f"   merge @ round {m.barrier_round:>3d} t={m.time:9.0f} s"
+                  f" | max staleness {stale:7.1f} s"
+                  f" | isl cost {max(m.isl_costs):6.1f} s"
+                  f" | global acc {max(m.accuracies):.3f}")
+        if eng.global_params is None:
+            print("   (merging disabled: independent per-region models)")
+        return
 
     if args.scenario and args.all_regions:
         from repro.sim import run_fl_all_regions

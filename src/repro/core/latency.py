@@ -36,6 +36,46 @@ def handover_delay(model_bits: float, q_bits: float, n_samples: float,
 
 
 # ---------------------------------------------------------------------------
+# Cross-region merge pricing over the ISL topology ---------------------------
+# ---------------------------------------------------------------------------
+MERGE_TOPOLOGIES = ("ring", "star")
+
+
+def isl_merge_hops(topology: str, region_index: int, n_regions: int,
+                   hub: int = 0) -> int:
+    """ISL hops region ``region_index``'s model travels for one global
+    merge: up to the aggregating satellite (the one serving region
+    ``hub``) and back down with the merged model.
+
+    * ``"star"`` — every region's serving satellite has a direct ISL to
+      the aggregator: 2 hops (up + down); the hub region pays 0.
+    * ``"ring"`` — serving satellites form a ring in region order (the
+      natural Walker-Star cross-plane layout): 2x the ring distance.
+    """
+    if not 0 <= region_index < n_regions:
+        raise ValueError(f"region_index={region_index} out of range for "
+                         f"{n_regions} region(s)")
+    if n_regions <= 1 or region_index == hub % n_regions:
+        return 0
+    if topology == "star":
+        return 2
+    if topology == "ring":
+        d = abs(region_index - hub % n_regions)
+        return 2 * min(d, n_regions - d)
+    raise ValueError(f"unknown merge topology {topology!r}; "
+                     f"expected one of {MERGE_TOPOLOGIES}")
+
+
+def global_merge_latency(model_bits: float, z_isl: float, topology: str,
+                         region_index: int, n_regions: int,
+                         hub: int = 0) -> float:
+    """ISL price of one global merge for a region: eq. (7) with a
+    model-only payload (no raw data rides along), once per hop."""
+    hops = isl_merge_hops(topology, region_index, n_regions, hub=hub)
+    return hops * tx_time(model_bits, z_isl)
+
+
+# ---------------------------------------------------------------------------
 # Space-layer latency with handover (eqs. 8-12) ------------------------------
 # ---------------------------------------------------------------------------
 def space_layer_latency(n_samples: float, sagin: SAGIN) -> float:

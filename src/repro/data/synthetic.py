@@ -41,10 +41,18 @@ class Dataset:
 
 
 def make_dataset(name: str, noise: float = 0.9, seed: int = 0,
-                 train_fraction: float = 1.0) -> Dataset:
+                 train_fraction: float = 1.0,
+                 sample_seed: int | None = None) -> Dataset:
     """Generate a synthetic dataset shaped like ``name``.
 
     ``train_fraction`` can shrink the dataset for fast tests.
+
+    ``seed`` fixes the TASK (the class prototype templates);
+    ``sample_seed`` (default: ``seed``) fixes the train/test sample
+    draw around those prototypes.  Multi-region FL uses this split to
+    give every region a different sample of the SAME task — models
+    trained in different regions then solve one problem and can be
+    merged into a global model.
     """
     shape, n_classes, n_train, n_test = SPECS[name]
     n_train = int(n_train * train_fraction)
@@ -63,7 +71,8 @@ def make_dataset(name: str, noise: float = 0.9, seed: int = 0,
                                          size=(n,) + shape).astype(np.float32)
         return x.astype(np.float32), y
 
-    x_tr, y_tr = gen(n_train, seed + 1)
-    x_te, y_te = gen(n_test, seed + 2)
+    s = seed if sample_seed is None else sample_seed
+    x_tr, y_tr = gen(n_train, s + 1)
+    x_te, y_te = gen(n_test, s + 2)
     return Dataset(name=name, x_train=x_tr, y_train=y_tr,
                    x_test=x_te, y_test=y_te)

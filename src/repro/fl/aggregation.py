@@ -1,4 +1,4 @@
-"""Hierarchical model aggregation (eq. 13).
+"""Hierarchical model aggregation (eq. 13) and the cross-region merge.
 
 Three implementations of the same weighted average:
 
@@ -9,14 +9,25 @@ Three implementations of the same weighted average:
                            runner: lambda-weighted psum over the ``data``
                            axis (air-level aggregation) then the ``pod``
                            axis (space-level aggregation), inside shard_map.
+
+On top of these, ``staleness_weighted_merge`` is the GLOBAL tier: it
+averages per-region models (one per :class:`~repro.fl.rounds.RegionTrainer`)
+into a single model over the inter-satellite links, weighting each
+region by its data share discounted for model staleness — regions reach
+an event-stepped merge barrier at different wall times, and a model that
+sat waiting for ``s`` seconds contributes ``2^(-s / half_life)`` of its
+share (FedMeld-style age discount).  The merge stacks the region pytrees
+and reuses ``fedavg_stacked``, i.e. the Pallas ``fedavg_agg`` kernel
+path on TPU.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def fedavg(params_list: List, weights: Sequence[float]):
@@ -45,6 +56,60 @@ def fedavg_stacked(stacked_params, weights, interpret: bool = False):
         lambda leaf: agg_ops.weighted_aggregate(leaf, w,
                                                 interpret=interpret),
         stacked_params)
+
+
+def staleness_merge_weights(sizes: Sequence[float],
+                            staleness: Sequence[float],
+                            half_life: Optional[float] = None) -> np.ndarray:
+    """Normalized cross-region merge weights.
+
+    ``weight_i ∝ sizes_i * 2^(-staleness_i / half_life)``: the data-share
+    lambda of eq. (13) lifted to whole regions, discounted for the age of
+    each region's model at the merge instant.  ``half_life=None`` (or
+    ``inf``) disables the discount — pure data-share FedAvg.
+    """
+    w = np.asarray(sizes, dtype=np.float64)
+    if np.any(w < 0) or w.sum() <= 0:
+        raise ValueError(f"region sizes must be non-negative with positive "
+                         f"total, got {list(sizes)}")
+    s = np.asarray(staleness, dtype=np.float64)
+    if s.shape != w.shape:
+        raise ValueError(f"sizes/staleness length mismatch: "
+                         f"{w.shape} vs {s.shape}")
+    if np.any(s < 0):
+        raise ValueError(f"staleness must be non-negative, got {list(s)}")
+    if half_life is not None and np.isfinite(half_life):
+        if half_life <= 0:
+            raise ValueError(f"half_life must be positive, got {half_life}")
+        w = w * np.exp2(-s / half_life)
+    return w / w.sum()
+
+
+def staleness_weighted_merge(params_list: List, sizes: Sequence[float],
+                             staleness: Sequence[float],
+                             half_life: Optional[float] = None,
+                             interpret: bool = False,
+                             return_weights: bool = False):
+    """Merge per-region models into ONE global model.
+
+    Stacks the region pytrees along a leading region axis and dispatches
+    to :func:`fedavg_stacked` (the Pallas ``fedavg_agg`` kernel path on
+    TPU) with :func:`staleness_merge_weights`.  ``return_weights=True``
+    additionally returns the realized weights — the engine records them
+    in its :class:`~repro.sim.engine.MergeEvent` without recomputing.
+    """
+    if len(params_list) != len(list(sizes)):
+        raise ValueError(f"{len(params_list)} models but "
+                         f"{len(list(sizes))} sizes")
+    w = staleness_merge_weights(sizes, staleness, half_life)
+    if len(params_list) == 1:
+        merged = params_list[0]
+    else:
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *params_list)
+        merged = fedavg_stacked(stacked, jnp.asarray(w, jnp.float32),
+                                interpret=interpret)
+    return (merged, w) if return_weights else merged
 
 
 def hierarchical_weighted_psum(local_params, lam, axis_names):

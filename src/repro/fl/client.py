@@ -121,3 +121,12 @@ def evaluate(apply_fn: Callable, params, x, y) -> Tuple[jnp.ndarray,
     loss = cross_entropy(logits, y)
     acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
     return loss, acc
+
+
+@partial(jax.jit, static_argnums=(0,))
+def stacked_evaluate(apply_fn: Callable, stacked_params, x,
+                     y) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(losses, accuracies), each of shape (C,), for a stack of models
+    (leading axis C) on ONE shared eval batch — the apples-to-apples
+    comparison of per-region models against the merged global model."""
+    return jax.vmap(lambda p: evaluate(apply_fn, p, x, y))(stacked_params)

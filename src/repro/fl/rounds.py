@@ -6,6 +6,23 @@ holds samples runs H local SGD iterations, models are aggregated with the
 eq.-(13) lambda weights, and the wall clock advances by the optimized round
 latency. Produces accuracy-versus-training-time curves (Figs. 4, 6, 7).
 
+The unit of execution is :class:`RegionTrainer` — ONE region's complete
+FL job (dataset, pools, model, orchestrator), advanced one round at a
+time via :meth:`RegionTrainer.step`.  :func:`run_fl` is the thin
+single-region wrapper that steps a trainer ``n_rounds`` times; the
+multi-region :class:`~repro.sim.engine.SAGINEngine` steps many trainers
+through its event heap and merges their models across regions
+(``fl.aggregation.staleness_weighted_merge``).
+
+Region addressing: with a scenario, all of a region's streams — dataset
+sample draw, partition shuffle, orchestrator satellite draws, dynamics
+events — are rooted at ``region_seed(cfg.seed, cfg.region_index)``
+(see :func:`repro.sim.engine.region_streams`), so
+``run_fl(FLConfig(scenario=s, region_index=i))`` reproduces engine
+region ``i`` exactly.  The MODEL INIT alone stays keyed on the global
+``cfg.seed``: hierarchical FL requires every region to descend from one
+broadcast initial model for cross-region merges to be meaningful.
+
 Execution modes (``FLConfig.execution``):
 
 * ``"batched"`` — the cohort engine. Every data-holding node's (H, B)
@@ -39,8 +56,7 @@ produce the same accuracy trajectory up to float reduction-order noise.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -48,11 +64,15 @@ import numpy as np
 
 from repro.core import SAGINOrchestrator, build_default_sagin
 from repro.core.network import SAGIN
-from repro.data import Dataset, FederatedPools, make_dataset, partition
+from repro.data import FederatedPools, make_dataset, partition
 from repro.models.cnn import build_model, model_bits
 
 from .aggregation import fedavg, fedavg_stacked
 from .client import cohort_local_update, evaluate, local_update
+
+if TYPE_CHECKING:  # pragma: no cover - circular-import guard
+    from repro.core.constellation import AccessInterval
+    from repro.scenarios.registry import Scenario
 
 
 @dataclasses.dataclass
@@ -87,10 +107,15 @@ class FLConfig:
 @dataclasses.dataclass
 class FLResult:
     config: FLConfig
-    times: List[float]             # cumulative training time (s)
-    accuracies: List[float]
-    losses: List[float]
-    latencies: List[float]
+    times: List[float]             # cumulative training time (s); under the
+    #                              engine's merge barriers this also includes
+    #                              barrier wait + ISL merge costs
+    accuracies: List[float]        # on this region's held-out eval batch
+    losses: List[float]            # mean TRAIN loss across this round's
+    #                              training nodes; NaN for a round in which
+    #                              no node held data (never silently the
+    #                              eval loss — consumers must nan-filter)
+    latencies: List[float]         # realized per-round latency
     cases: List[int]
     layer_portions: List[Dict[str, float]]  # data share per layer per round
 
@@ -101,42 +126,45 @@ class FLResult:
         return None
 
 
-def _build_orchestrator(cfg: FLConfig, sagin: SAGIN) -> SAGINOrchestrator:
+def _build_orchestrator(cfg: FLConfig, sagin: SAGIN,
+                        scenario: Optional["Scenario"] = None,
+                        intervals: Optional[Sequence["AccessInterval"]] = None
+                        ) -> SAGINOrchestrator:
     """Orchestrator from the config: scenario preset, bare Walker-Star, or
     the static satellite list, in that order of precedence.
 
     With a scenario, coverage windows come from the vectorized
     multi-region propagation pass and the preset's stochastic dynamics
     are attached, so the wall clock advances by *realized* latencies.
+    The engine passes ``scenario``/``intervals`` explicitly to share one
+    propagation pass (and to support unregistered ad-hoc scenarios); a
+    standalone job resolves the preset by name and propagates only its
+    own region.
     """
-    if cfg.scenario is not None:
-        from repro.scenarios import get_scenario
-        from repro.sim.dynamics import NetworkDynamics
+    if cfg.scenario is not None or scenario is not None:
+        from repro.sim.engine import region_streams
         from repro.sim.propagation import access_intervals_multi
 
-        scn = get_scenario(cfg.scenario)
+        scn = scenario if scenario is not None else _resolve_scenario(cfg)
         try:
             region = scn.regions[cfg.region_index]
         except IndexError:
             raise ValueError(
                 f"scenario {scn.name!r} has {len(scn.regions)} region(s); "
                 f"region_index={cfg.region_index} is out of range") from None
-        # propagate only this job's region (the engine shares one pass
-        # across regions; a single-region FL job shouldn't pay for all)
-        intervals = access_intervals_multi(
-            scn.build_constellation(), [region], t_end=scn.horizon,
-            dt=scn.dt)[region.name]
-        dynamics = None
-        if scn.dynamics is not None:
-            dynamics = NetworkDynamics(
-                scn.dynamics,
-                rng=np.random.default_rng(cfg.seed).spawn(1)[0])
+        if intervals is None:
+            # propagate only this job's region (the engine shares one pass
+            # across regions; a single-region FL job shouldn't pay for all)
+            intervals = access_intervals_multi(
+                scn.build_constellation(), [region], t_end=scn.horizon,
+                dt=scn.dt)[region.name]
+        rng, dynamics = region_streams(cfg.seed, cfg.region_index,
+                                       scn.dynamics)
         # an explicitly non-default FLConfig.strategy wins; otherwise the
         # scenario's declared scheme applies (as in SAGINEngine)
         strategy = (cfg.strategy if cfg.strategy != "adaptive"
                     else scn.strategy)
-        return SAGINOrchestrator(sagin, intervals=intervals,
-                                 rng=np.random.default_rng(cfg.seed),
+        return SAGINOrchestrator(sagin, intervals=intervals, rng=rng,
                                  dynamics=dynamics, strategy=strategy)
     constellation = None
     if cfg.use_constellation:
@@ -144,6 +172,11 @@ def _build_orchestrator(cfg: FLConfig, sagin: SAGIN) -> SAGINOrchestrator:
         constellation = WalkerStar()
     return SAGINOrchestrator(sagin, constellation=constellation,
                              sat_f_seed=cfg.seed, strategy=cfg.strategy)
+
+
+def _resolve_scenario(cfg: FLConfig) -> "Scenario":
+    from repro.scenarios import get_scenario
+    return get_scenario(cfg.scenario)
 
 
 def _train_node(apply_fn, params, ds, idx, h, lr, batch_cap, rng):
@@ -216,69 +249,142 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
     return params, losses
 
 
-def run_fl(cfg: FLConfig) -> FLResult:
-    rng = np.random.default_rng(cfg.seed)
-    ds = make_dataset(cfg.dataset, seed=cfg.seed,
-                      train_fraction=cfg.train_fraction)
-    parts = partition(ds, n_devices=cfg.n_devices, iid=cfg.iid,
-                      alpha=cfg.alpha, seed=cfg.seed)
-    pools = FederatedPools.from_partitions(parts, cfg.n_air)
+class RegionTrainer:
+    """One region's complete FL job, advanced one round at a time.
 
-    key = jax.random.PRNGKey(cfg.seed)
-    params, apply_fn = build_model(ds.name, key,
-                                   image_shape=ds.x_train.shape[1:])
-    q_bits = ds.sample_bits
-    sagin = build_default_sagin(
-        n_devices=cfg.n_devices, n_air=cfg.n_air, alpha=cfg.alpha,
-        q_bits=q_bits, model_bits=model_bits(params),
-        rayleigh=cfg.rayleigh, seed=cfg.seed)
-    # sync actual per-device sizes into the network model
-    for k, p in enumerate(parts):
-        sagin.devices[k].n_samples = p.n_samples
-        sagin.devices[k].n_sensitive = p.n_sensitive
+    Owns the region's dataset, index pools, model parameters, and SAGIN
+    orchestrator; :meth:`step` executes one full round (orchestration,
+    data placement, local training, aggregation, evaluation) and appends
+    to :attr:`result`.  Construction is the exact sequence the historic
+    ``run_fl`` body performed, so stepping a trainer ``n_rounds`` times
+    is trajectory-identical to the pre-refactor loop at equal seeds.
 
-    orch = _build_orchestrator(cfg, sagin)
+    The engine passes ``scenario``/``intervals`` so every region shares
+    one propagation pass; standalone use needs only the config.  After a
+    cross-region merge the engine calls :meth:`install_global` to adopt
+    the global model and the post-merge wall clock.
+    """
 
-    execution = cfg.resolved_execution()
-    if execution not in ("batched", "sequential"):
-        raise ValueError(
-            f"FLConfig.execution must be 'auto', 'batched' or "
-            f"'sequential', got {cfg.execution!r}")
+    def __init__(self, cfg: FLConfig,
+                 scenario: Optional["Scenario"] = None,
+                 intervals: Optional[Sequence["AccessInterval"]] = None):
+        self.cfg = cfg
+        scn = scenario
+        if scn is None and cfg.scenario is not None:
+            scn = _resolve_scenario(cfg)
+        if scn is not None:
+            from repro.sim.engine import region_seed
+            rseed = region_seed(cfg.seed, cfg.region_index)
+            self.region = (scn.regions[cfg.region_index]
+                           if cfg.region_index < len(scn.regions) else None)
+        else:
+            rseed = cfg.seed
+            self.region = None
+        self.region_seed = rseed
+        self.rng = np.random.default_rng(rseed)
+        # regions share the TASK (class prototypes keyed on the global
+        # seed) but draw disjoint-by-construction sample streams
+        self.ds = make_dataset(cfg.dataset, seed=cfg.seed,
+                               train_fraction=cfg.train_fraction,
+                               sample_seed=rseed)
+        parts = partition(self.ds, n_devices=cfg.n_devices, iid=cfg.iid,
+                          alpha=cfg.alpha, seed=rseed)
+        self.pools = FederatedPools.from_partitions(parts, cfg.n_air)
 
-    result = FLResult(cfg, [], [], [], [], [], [])
-    eval_idx = rng.choice(len(ds.x_test),
-                          size=min(cfg.eval_size, len(ds.x_test)),
-                          replace=False)
-    x_eval = jnp.asarray(ds.x_test[eval_idx])
-    y_eval = jnp.asarray(ds.y_test[eval_idx])
+        # model init is keyed on the GLOBAL seed: every region descends
+        # from the same broadcast initial model (merge prerequisite)
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params, self.apply_fn = build_model(
+            self.ds.name, key, image_shape=self.ds.x_train.shape[1:])
+        q_bits = self.ds.sample_bits
+        self.sagin = build_default_sagin(
+            n_devices=cfg.n_devices, n_air=cfg.n_air, alpha=cfg.alpha,
+            q_bits=q_bits, model_bits=model_bits(self.params),
+            rayleigh=cfg.rayleigh, seed=rseed)
+        # sync actual per-device sizes into the network model
+        for k, p in enumerate(parts):
+            self.sagin.devices[k].n_samples = p.n_samples
+            self.sagin.devices[k].n_sensitive = p.n_sensitive
 
-    for r in range(cfg.n_rounds):
-        rec = orch.step(r)
-        _apply_plan_to_pools(rec.plan, pools, sagin)
-        _sync_sizes(pools, sagin)
+        self.orch = _build_orchestrator(cfg, self.sagin, scenario=scn,
+                                        intervals=intervals)
+
+        self.execution = cfg.resolved_execution()
+        if self.execution not in ("batched", "sequential"):
+            raise ValueError(
+                f"FLConfig.execution must be 'auto', 'batched' or "
+                f"'sequential', got {cfg.execution!r}")
+
+        self.result = FLResult(cfg, [], [], [], [], [], [])
+        eval_idx = self.rng.choice(len(self.ds.x_test),
+                                   size=min(cfg.eval_size,
+                                            len(self.ds.x_test)),
+                                   replace=False)
+        self.x_eval = jnp.asarray(self.ds.x_test[eval_idx])
+        self.y_eval = jnp.asarray(self.ds.y_test[eval_idx])
+
+    @property
+    def wall_clock(self) -> float:
+        return self.orch.wall_clock
+
+    @property
+    def total_samples(self) -> int:
+        """This region's data mass (constant: offloading conserves it)."""
+        return self.pools.total()
+
+    def install_global(self, params, wall_clock: float):
+        """Adopt the post-merge global model and post-merge clock; the
+        next :meth:`step` resumes local training from the global model."""
+        self.params = params
+        self.orch.wall_clock = wall_clock
+
+    def step(self, r: int):
+        """Execute FL round ``r``: orchestrate, place data, train every
+        data-holding node, aggregate, evaluate.  Returns the round's
+        :class:`~repro.core.scheduler.RoundRecord` and appends the
+        training metrics to :attr:`result`."""
+        cfg = self.cfg
+        rec = self.orch.step(r)
+        _apply_plan_to_pools(rec.plan, self.pools, self.sagin)
+        _sync_sizes(self.pools, self.sagin)
 
         # ---- local training at every node that holds data ----------------
-        total = pools.total()
-        node_pools = _node_pools(cfg, pools, offline=rec.offline_devices)
-        if execution == "batched":
-            params, losses = _round_batched(cfg, apply_fn, params, ds,
-                                            node_pools, total, rng)
+        total = self.pools.total()
+        node_pools = _node_pools(cfg, self.pools,
+                                 offline=rec.offline_devices)
+        if self.execution == "batched":
+            self.params, losses = _round_batched(
+                cfg, self.apply_fn, self.params, self.ds, node_pools,
+                total, self.rng)
         else:
-            params, losses = _round_sequential(cfg, apply_fn, params, ds,
-                                               node_pools, total, rng)
+            self.params, losses = _round_sequential(
+                cfg, self.apply_fn, self.params, self.ds, node_pools,
+                total, self.rng)
 
-        loss, acc = evaluate(apply_fn, params, x_eval, y_eval)
-        result.times.append(orch.wall_clock)
-        result.accuracies.append(float(acc))
-        result.losses.append(float(np.mean(losses)) if losses else float(loss))
-        result.latencies.append(rec.realized_latency)
-        result.cases.append(rec.plan.case)
-        n_ground = sum(len(pools.ground_all(k)) for k in range(cfg.n_devices))
-        n_air = sum(len(a) for a in pools.air)
-        result.layer_portions.append({
+        _, acc = evaluate(self.apply_fn, self.params, self.x_eval,
+                          self.y_eval)
+        res = self.result
+        res.times.append(self.orch.wall_clock)
+        res.accuracies.append(float(acc))
+        res.losses.append(float(np.mean(losses)) if losses
+                          else float("nan"))
+        res.latencies.append(rec.realized_latency)
+        res.cases.append(rec.plan.case)
+        n_ground = sum(len(self.pools.ground_all(k))
+                       for k in range(cfg.n_devices))
+        n_air = sum(len(a) for a in self.pools.air)
+        res.layer_portions.append({
             "ground": n_ground / total, "air": n_air / total,
-            "space": len(pools.sat) / total})
-    return result
+            "space": len(self.pools.sat) / total})
+        return rec
+
+
+def run_fl(cfg: FLConfig) -> FLResult:
+    """Single-region FL job: a :class:`RegionTrainer` stepped to the end."""
+    trainer = RegionTrainer(cfg)
+    for r in range(cfg.n_rounds):
+        trainer.step(r)
+    return trainer.result
 
 
 def _apply_plan_to_pools(plan, pools: FederatedPools, sagin: SAGIN):

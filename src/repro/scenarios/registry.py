@@ -43,9 +43,29 @@ class Scenario:
     strategy: str = "adaptive"
     # dynamics --------------------------------------------------------------
     dynamics: Optional[DynamicsConfig] = None
+    # cross-region merge (engine FL mode) -----------------------------------
+    # Every merge_every rounds, all regions rendezvous and their models
+    # are merged into ONE global model over the ISLs; None keeps regions
+    # fully independent (one model per region, the pre-merge behavior).
+    merge_every: Optional[int] = None
+    merge_topology: str = "ring"            # "ring" | "star" ISL route
+    # staleness discount half-life (s): a region model that waited s
+    # seconds at the merge barrier keeps 2^(-s/half_life) of its data
+    # share; None = no discount (pure data-share FedAvg across regions)
+    merge_half_life: Optional[float] = None
     # propagation window ----------------------------------------------------
     horizon: float = 48 * 3600.0
     dt: float = 10.0
+
+    def __post_init__(self):
+        from repro.core.latency import MERGE_TOPOLOGIES
+        if self.merge_every is not None and self.merge_every < 1:
+            raise ValueError(f"{self.name}: merge_every must be a positive "
+                             f"round count or None, got {self.merge_every}")
+        if self.merge_topology not in MERGE_TOPOLOGIES:
+            raise ValueError(f"{self.name}: merge_topology must be one of "
+                             f"{MERGE_TOPOLOGIES}, got "
+                             f"{self.merge_topology!r}")
 
     def build_constellation(self) -> WalkerStar:
         if self.n_sats % self.n_planes:
@@ -111,13 +131,16 @@ register(Scenario(
 
 register(Scenario(
     name="multi_region",
-    description="One shared 80-sat constellation orchestrating four "
-                "independent FL regions across four continents.",
+    description="One shared 80-sat constellation training ONE global FL "
+                "model across four continents: regions merge over the "
+                "ISL ring every 2 rounds with staleness-discounted "
+                "weights (set merge_every=None for independent models).",
     regions=(Region("indiana", 40.0, -86.0),
              Region("nairobi", -1.3, 36.8),
              Region("reykjavik", 64.1, -21.9),
              Region("sydney", -33.9, 151.2)),
     n_devices=20, n_air=2,
+    merge_every=2, merge_topology="ring", merge_half_life=3600.0,
     horizon=24 * 3600.0,
 ))
 

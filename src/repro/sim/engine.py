@@ -1,39 +1,87 @@
-"""Event-stepped multi-region SAGIN simulator.
+"""Event-stepped multi-region SAGIN simulator and hierarchical FL driver.
 
-Drives one :class:`~repro.core.scheduler.SAGINOrchestrator` per region
-over a *shared* constellation: coverage windows for every region come
-from a single batched propagation pass
+Drives one :class:`~repro.core.scheduler.SAGINOrchestrator` (or, in FL
+mode, one :class:`~repro.fl.rounds.RegionTrainer`) per region over a
+*shared* constellation: coverage windows for every region come from a
+single batched propagation pass
 (:func:`repro.sim.propagation.access_intervals_multi`), and regions
 advance through an event queue ordered by their wall clocks — the
 region whose next round starts earliest steps first, exactly as a
 gateway scheduler multiplexing one constellation across independent FL
 jobs would interleave them.
 
-Randomness is fully threaded: one root ``numpy.random.Generator`` is
-spawned into independent per-region streams (satellite CPU draws) and
-per-region dynamics streams (outages/weather/churn), so identical seeds
-give identical multi-region trajectories regardless of interleaving.
+**FL mode** (pass ``fl=FLConfig(...)``) replaces the bare orchestrators
+with full per-region trainers, so the engine event-steps *actual
+federated training*.  When the scenario configures a merge cadence
+(``Scenario.merge_every``), regions rendezvous every ``merge_every``
+rounds at a global merge barrier: each arriving region parks until all
+have arrived, then the region models are averaged into ONE global model
+with weights that combine each region's data share and a FedMeld-style
+staleness discount — a region whose model has been waiting at the
+barrier for ``s`` seconds (event-stepped clocks reach merge points at
+different wall times) contributes ``2^(-s / merge_half_life)`` of its
+share.  The merged model is priced over the inter-satellite links
+(:func:`repro.core.latency.global_merge_latency`): every region's clock
+advances to the merge time plus its topology-dependent ISL round trip
+before training resumes from the global model.
 
-The realized (not just analytic) per-round latencies recorded here are
-the same ones :func:`repro.fl.rounds.run_fl` consumes when an FLConfig
-selects a scenario — see ``run_fl_all_regions`` for the convenience
-wrapper that trains one FL model per region.
+Randomness is fully threaded and *region-addressable*: region ``i``'s
+orchestrator/dynamics streams are rooted at
+``region_seed(seed, i) = seed + 1000 * i`` (see :func:`region_streams`),
+the exact derivation :func:`repro.fl.rounds.run_fl` applies for
+``FLConfig(scenario=..., region_index=i)`` — a single-region FL job and
+engine region ``i`` draw identical outage/churn/satellite-CPU streams
+at equal seeds, and identical seeds give identical multi-region
+trajectories regardless of interleaving.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, TYPE_CHECKING
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.network import build_default_sagin
 from repro.core.scheduler import RoundRecord, SAGINOrchestrator
-from repro.sim.dynamics import NetworkDynamics
+from repro.sim.dynamics import DynamicsConfig, NetworkDynamics
 from repro.sim.propagation import Region
 
-if TYPE_CHECKING:  # pragma: no cover - scenarios imports sim.dynamics
+if TYPE_CHECKING:  # pragma: no cover - circular-import guard
+    from repro.fl.rounds import FLConfig, FLResult, RegionTrainer
     from repro.scenarios.registry import Scenario
+
+
+def region_seed(seed: int, region_index: int) -> int:
+    """Root seed of region ``region_index``'s RNG streams.
+
+    The fold is by construction independent of how many regions a
+    scenario declares, so a single-region ``run_fl`` job can reproduce
+    any engine region's draws without replaying the regions before it.
+    """
+    return seed + 1000 * region_index
+
+
+def region_streams(seed: int, region_index: int,
+                   dynamics_cfg: Optional[DynamicsConfig] = None
+                   ) -> Tuple[np.random.Generator,
+                              Optional[NetworkDynamics]]:
+    """Canonical per-region ``(orchestrator_rng, dynamics)`` derivation.
+
+    This is the ONE place the engine and :func:`repro.fl.rounds.run_fl`
+    agree on how region ``i``'s streams descend from a root seed: the
+    orchestrator draws (satellite CPU frequencies) come from the root
+    stream of ``region_seed(seed, i)`` and the dynamics events
+    (outages/weather/churn) from its first spawned child — the same
+    parent/child split the seed orchestrator used for a single region.
+    """
+    rseed = region_seed(seed, region_index)
+    rng = np.random.default_rng(rseed)
+    dynamics = None
+    if dynamics_cfg is not None:
+        dynamics = NetworkDynamics(
+            dynamics_cfg, rng=np.random.default_rng(rseed).spawn(1)[0])
+    return rng, dynamics
 
 
 @dataclasses.dataclass
@@ -56,54 +104,173 @@ class RegionTrace:
         return [r.realized_latency for r in self.records]
 
 
+@dataclasses.dataclass(frozen=True)
+class MergeEvent:
+    """One global staleness-aware merge across regions over the ISLs."""
+    barrier_round: int            # regions had completed this many rounds
+    time: float                   # merge wall-clock (last region's arrival)
+    staleness: Tuple[float, ...]  # per-region model age at merge (s)
+    weights: Tuple[float, ...]    # realized merge weights (sum to 1)
+    isl_costs: Tuple[float, ...]  # per-region ISL round-trip price (s)
+    accuracies: Tuple[float, ...]  # merged model on each region's eval set
+
+
 class SAGINEngine:
-    """Multi-region simulator over one shared constellation."""
+    """Multi-region simulator over one shared constellation.
+
+    Without ``fl`` the engine steps bare orchestrators (network-only
+    simulation, as in PR 2).  With ``fl=FLConfig(...)`` it builds one
+    :class:`~repro.fl.rounds.RegionTrainer` per region (``fl.seed``
+    governs all streams; the ``seed``/``n_devices``/``n_air`` arguments
+    are ignored in favor of the FLConfig) and :meth:`run` performs
+    event-stepped federated training with optional global merges.
+    """
 
     def __init__(self, scenario: "Scenario | str", seed: int = 0,
                  n_devices: Optional[int] = None,
                  n_air: Optional[int] = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 fl: Optional["FLConfig"] = None):
         if isinstance(scenario, str):
             from repro.scenarios.registry import get_scenario
             scenario = get_scenario(scenario)
         self.scenario = scenario
         self.constellation = scenario.build_constellation()
         self.intervals = scenario.build_intervals(backend=backend)
+        self.fl_config = fl
+        self.trainers: List["RegionTrainer"] = []
+        self.merges: List[MergeEvent] = []
+        self.global_params = None
+        self.step_order: List[Tuple[int, int]] = []  # (region, round) pops
+        self.traces: List[RegionTrace] = [RegionTrace(region=r)
+                                          for r in scenario.regions]
+        self.orchestrators: List[SAGINOrchestrator] = []
+        if fl is not None:
+            from repro.fl.rounds import RegionTrainer
+            for i, region in enumerate(scenario.regions):
+                cfg_i = dataclasses.replace(fl, scenario=scenario.name,
+                                            region_index=i)
+                self.trainers.append(RegionTrainer(
+                    cfg_i, scenario=scenario,
+                    intervals=self.intervals[region.name]))
+            return
         nd = n_devices if n_devices is not None else scenario.n_devices
         na = n_air if n_air is not None else scenario.n_air
-        root = np.random.default_rng(seed)
-        root_dynamics = (NetworkDynamics(scenario.dynamics,
-                                         rng=root.spawn(1)[0])
-                         if scenario.dynamics is not None else None)
-        self.orchestrators: List[SAGINOrchestrator] = []
-        self.traces: List[RegionTrace] = []
         for i, region in enumerate(scenario.regions):
-            rng = root.spawn(1)[0]
+            rng, dynamics = region_streams(seed, i, scenario.dynamics)
             sagin = build_default_sagin(
                 n_devices=nd, n_air=na,
                 samples_per_device=scenario.samples_per_device,
-                alpha=scenario.alpha, seed=seed + 1000 * i)
-            dynamics = (root_dynamics.spawn()
-                        if root_dynamics is not None else None)
+                alpha=scenario.alpha, seed=region_seed(seed, i))
             self.orchestrators.append(SAGINOrchestrator(
                 sagin, intervals=self.intervals[region.name], rng=rng,
                 dynamics=dynamics, strategy=scenario.strategy))
-            self.traces.append(RegionTrace(region=region))
 
+    # -- event loop ---------------------------------------------------------
     def run(self, n_rounds: int) -> List[RegionTrace]:
         """Advance every region by ``n_rounds``, event-stepped: at each
         step the region with the earliest wall clock executes its next
-        round (ties broken by region index for determinism)."""
+        round (ties broken by region index for determinism; the pop
+        sequence is recorded in ``self.step_order``).  In FL mode with a
+        merge cadence, regions additionally rendezvous at global merge
+        barriers (see :meth:`_global_merge`)."""
+        if self.trainers:
+            return self._run_fl(n_rounds)
+        self.step_order = []
+        if n_rounds <= 0:
+            return self.traces
         heap = [(orch.wall_clock, i, 0)
                 for i, orch in enumerate(self.orchestrators)]
         heapq.heapify(heap)
         while heap:
             _, i, r = heapq.heappop(heap)
+            self.step_order.append((i, r))
             orch = self.orchestrators[i]
             self.traces[i].records.append(orch.step(r))
             if r + 1 < n_rounds:
                 heapq.heappush(heap, (orch.wall_clock, i, r + 1))
         return self.traces
+
+    def _run_fl(self, n_rounds: int) -> List[RegionTrace]:
+        """FL mode: event-step the region trainers; park regions arriving
+        at a merge barrier until the last one arrives, then merge."""
+        merge_every = self.scenario.merge_every
+        self.step_order = []
+        self.merges = []
+        if n_rounds <= 0:
+            return self.traces
+        heap = [(t.wall_clock, i, 0) for i, t in enumerate(self.trainers)]
+        heapq.heapify(heap)
+        waiting: List[Tuple[int, int]] = []  # (region, next_round) parked
+        while heap:
+            _, i, r = heapq.heappop(heap)
+            self.step_order.append((i, r))
+            trainer = self.trainers[i]
+            self.traces[i].records.append(trainer.step(r))
+            nxt = r + 1
+            at_barrier = (merge_every is not None
+                          and (nxt % merge_every == 0 or nxt == n_rounds))
+            if at_barrier:
+                waiting.append((i, nxt))
+                if len(waiting) == len(self.trainers):
+                    self._global_merge(nxt)
+                    for j, nr in waiting:
+                        if nr < n_rounds:
+                            heapq.heappush(
+                                heap, (self.trainers[j].wall_clock, j, nr))
+                    waiting = []
+            elif nxt < n_rounds:
+                heapq.heappush(heap, (trainer.wall_clock, i, nxt))
+        if merge_every is None and self.trainers:
+            # no merging: the "global" model is undefined; expose None so
+            # callers can tell one-global-model runs from independent ones
+            self.global_params = None
+        return self.traces
+
+    def _global_merge(self, barrier_round: int):
+        """Merge every region's model into one global model over the ISLs.
+
+        The merge fires when the LAST region reaches the barrier; a
+        region that arrived earlier has an older model, discounted by
+        ``2^(-age / merge_half_life)`` on top of its data share
+        (FedMeld-style).  Each region then pays its topology-dependent
+        ISL round trip (:func:`repro.core.latency.global_merge_latency`)
+        before resuming from the merged model.
+        """
+        from repro.core.latency import global_merge_latency
+        from repro.fl.aggregation import staleness_weighted_merge
+        from repro.fl.client import evaluate
+
+        scn = self.scenario
+        trainers = self.trainers
+        t_merge = max(t.wall_clock for t in trainers)
+        staleness = [t_merge - t.wall_clock for t in trainers]
+        sizes = [t.total_samples for t in trainers]
+        merged, weights = staleness_weighted_merge(
+            [t.params for t in trainers], sizes, staleness,
+            half_life=scn.merge_half_life, return_weights=True)
+        costs, accs = [], []
+        for i, t in enumerate(trainers):
+            cost = global_merge_latency(
+                t.sagin.model_bits, t.sagin.z_isl, scn.merge_topology,
+                i, len(trainers))
+            costs.append(cost)
+            _, acc = evaluate(t.apply_fn, merged, t.x_eval, t.y_eval)
+            accs.append(float(acc))
+            t.install_global(merged, t_merge + cost)
+        self.global_params = merged
+        self.merges.append(MergeEvent(
+            barrier_round=barrier_round, time=t_merge,
+            staleness=tuple(staleness), weights=tuple(float(w)
+                                                      for w in weights),
+            isl_costs=tuple(costs), accuracies=tuple(accs)))
+
+    # -- results ------------------------------------------------------------
+    @property
+    def fl_results(self) -> Dict[str, "FLResult"]:
+        """FL mode: per-region training curves, keyed by region name."""
+        return {t.region.name: tr.result
+                for t, tr in zip(self.traces, self.trainers)}
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         """Per-region headline numbers for reports and benchmarks."""
@@ -122,13 +289,15 @@ class SAGINEngine:
 
 
 def run_fl_all_regions(cfg, scenario: "Scenario | str"):
-    """Train one FL model per scenario region via ``repro.fl.run_fl``.
+    """Train one INDEPENDENT FL model per scenario region via ``run_fl``.
 
     Returns ``{region_name: FLResult}``; each region's result carries the
-    realized (dynamics-priced) latencies in its time axis.  Each region
-    gets its own seed (folded from ``cfg.seed`` and the region index) so
-    data partitions, satellite draws, and dynamics streams differ across
-    regions, mirroring the engine's spawned per-region streams.
+    realized (dynamics-priced) latencies in its time axis.  Region ``i``
+    runs with ``region_index=i`` under the shared root ``cfg.seed``, so
+    its data draw and orchestrator/dynamics streams are exactly the ones
+    ``SAGINEngine`` region ``i`` sees (``region_seed`` fold) — use
+    ``SAGINEngine(scenario, fl=cfg)`` instead when the scenario merges
+    regions into one global model.
     """
     import dataclasses as _dc
 
@@ -151,8 +320,7 @@ def run_fl_all_regions(cfg, scenario: "Scenario | str"):
     try:
         for i, region in enumerate(scenario.regions):
             region_cfg = _dc.replace(cfg, scenario=scenario.name,
-                                     region_index=i,
-                                     seed=cfg.seed + 7919 * i)
+                                     region_index=i)
             out[region.name] = run_fl(region_cfg)
     finally:
         if transient is not None:

@@ -1,0 +1,376 @@
+"""Cross-region hierarchical FL tests: RegionTrainer trajectory
+preservation, unified region RNG streams, event-heap determinism,
+staleness-aware global merges over ISLs, and registry hygiene."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.latency import (global_merge_latency, isl_merge_hops,
+                                tx_time)
+from repro.fl import (FLConfig, RegionTrainer, fedavg, run_fl,
+                      staleness_merge_weights, staleness_weighted_merge)
+from repro.fl.client import evaluate, stacked_evaluate
+from repro.models.cnn import build_model
+from repro.scenarios import SCENARIOS, Scenario, get_scenario, register
+from repro.sim import (DynamicsConfig, Region, SAGINEngine, region_seed,
+                       region_streams, run_fl_all_regions)
+
+TINY = dict(dataset="mnist", n_rounds=3, n_devices=4, n_air=1, h_local=2,
+            train_fraction=0.005, eval_size=64, seed=0)
+
+# two-region scenario for fast merge tests (unregistered on purpose: the
+# engine and RegionTrainer take Scenario objects directly)
+XR2 = Scenario(
+    name="_xr2", description="two-region merge test scenario",
+    regions=(Region("indiana", 40.0, -86.0), Region("nairobi", -1.3, 36.8)),
+    n_devices=4, n_air=1, merge_every=1, merge_topology="star",
+    merge_half_life=600.0, horizon=6 * 3600.0)
+
+
+def tiny_cfg(**overrides):
+    kw = dict(TINY)
+    kw.update(overrides)
+    return FLConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole regression: the RegionTrainer refactor preserves trajectories ----
+# ---------------------------------------------------------------------------
+# Golden values captured from the pre-refactor run_fl loop (commit
+# 6a7e07a) at this exact TINY configuration; the refactor contract is
+# bit-identical reproduction at equal seeds.
+GOLDEN = {
+    "paper": {
+        "accuracies": [0.109375, 0.3125, 0.546875],
+        "latencies": [765.5785577775307, 765.5785577775287,
+                      765.5785577775287],
+        "times": [765.5785577775307, 1531.1571155550594,
+                  2296.735673332588],
+    },
+    "device_churn": {
+        "accuracies": [0.078125, 0.171875, 0.21875],
+        "latencies": [765.5785577775307, 765.5785577775287,
+                      765.5785577775287],
+        "times": [765.5785577775307, 1531.1571155550594,
+                  2296.735673332588],
+    },
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(GOLDEN))
+def test_run_fl_reproduces_pre_refactor_trajectories(scenario):
+    res = run_fl(tiny_cfg(scenario=scenario))
+    gold = GOLDEN[scenario]
+    assert res.accuracies == gold["accuracies"]
+    assert res.latencies == gold["latencies"]
+    assert res.times == gold["times"]
+
+
+def test_region_trainer_stepping_is_run_fl():
+    """run_fl is literally a stepped RegionTrainer: same object path."""
+    cfg = tiny_cfg(scenario="paper")
+    trainer = RegionTrainer(cfg)
+    for r in range(cfg.n_rounds):
+        trainer.step(r)
+    ref = run_fl(cfg)
+    assert trainer.result.accuracies == ref.accuracies
+    assert trainer.result.latencies == ref.latencies
+    assert trainer.result.times == ref.times
+
+
+# ---------------------------------------------------------------------------
+# Unified per-region RNG streams --------------------------------------------
+# ---------------------------------------------------------------------------
+def test_region_seed_fold_is_region_addressable():
+    assert region_seed(7, 0) == 7
+    assert region_seed(7, 3) == 7 + 3000
+
+
+def test_engine_and_run_fl_draw_identical_region_streams():
+    """The PR-2 mismatch: the engine spawned per-region streams from one
+    root generator while run_fl seeded its own — at the same seed, a
+    single-region job and engine region 0 saw different outage/churn
+    draws.  Both now derive from region_streams(); lock the initial
+    generator states together."""
+    scn = get_scenario("device_churn")
+    eng = SAGINEngine("device_churn", seed=3, n_devices=4, n_air=1)
+    rng, dyn = region_streams(3, 0, scn.dynamics)
+    orch = eng.orchestrators[0]
+    assert (orch._rng.bit_generator.state
+            == rng.bit_generator.state)
+    assert (orch.dynamics.rng.bit_generator.state
+            == dyn.rng.bit_generator.state)
+
+    trainer = RegionTrainer(tiny_cfg(scenario="device_churn", seed=3))
+    assert (trainer.orch._rng.bit_generator.state
+            == rng.bit_generator.state)
+    assert (trainer.orch.dynamics.rng.bit_generator.state
+            == dyn.rng.bit_generator.state)
+
+
+def test_region_streams_differ_across_regions_and_match_engine():
+    eng = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    states = []
+    for i in range(len(eng.scenario.regions)):
+        rng, dynamics = region_streams(0, i, None)
+        assert dynamics is None
+        assert (eng.orchestrators[i]._rng.bit_generator.state
+                == rng.bit_generator.state)
+        states.append(str(rng.bit_generator.state))
+    assert len(set(states)) == len(states)
+
+
+# ---------------------------------------------------------------------------
+# Event-heap determinism ----------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_engine_heap_tie_break_is_region_index_order():
+    """All regions start at wall clock 0: the first |regions| pops are a
+    pure tie, resolved by region index; the full pop sequence is
+    deterministic across identical engines."""
+    eng = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    eng.run(3)
+    n = len(eng.scenario.regions)
+    assert eng.step_order[:n] == [(i, 0) for i in range(n)]
+    assert len(eng.step_order) == 3 * n
+    # per-region round sequence is strictly increasing
+    for i in range(n):
+        rounds = [r for j, r in eng.step_order if j == i]
+        assert rounds == [0, 1, 2]
+    eng2 = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    eng2.run(3)
+    assert eng.step_order == eng2.step_order
+
+
+def test_run_fl_all_regions_unregisters_transient_scenario_on_error():
+    before = set(SCENARIOS)
+    adhoc = dataclasses.replace(get_scenario("paper"))  # name collision
+    with pytest.raises(ValueError, match="execution"):
+        run_fl_all_regions(tiny_cfg(execution="bogus"), adhoc)
+    assert set(SCENARIOS) == before
+
+
+# ---------------------------------------------------------------------------
+# FLResult.losses semantics -------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_losses_nan_when_no_node_trains():
+    """With every device churned out and nothing yet offloaded to
+    air/space, a round trains no node: the round must record NaN (not
+    silently the eval loss)."""
+    scn = Scenario(name="_all_churned", description="x",
+                   dynamics=DynamicsConfig(churn_prob=1.0))
+    register(scn)
+    try:
+        res = run_fl(tiny_cfg(scenario="_all_churned", n_rounds=1))
+    finally:
+        SCENARIOS.pop("_all_churned", None)
+    assert math.isnan(res.losses[0])
+    assert np.isfinite(res.accuracies[0])
+    assert np.isfinite(res.latencies[0])
+
+
+# ---------------------------------------------------------------------------
+# Staleness-aware merge weights and aggregation -----------------------------
+# ---------------------------------------------------------------------------
+def test_merge_weights_pure_data_share_without_half_life():
+    w = staleness_merge_weights([100, 300], [0.0, 1e9], half_life=None)
+    np.testing.assert_allclose(w, [0.25, 0.75])
+
+
+def test_merge_weights_halve_per_half_life():
+    w = staleness_merge_weights([1.0, 1.0], [0.0, 600.0], half_life=600.0)
+    np.testing.assert_allclose(w, [2 / 3, 1 / 3])
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_merge_weights_validation():
+    with pytest.raises(ValueError, match="sizes"):
+        staleness_merge_weights([0, 0], [0, 0])
+    with pytest.raises(ValueError, match="staleness"):
+        staleness_merge_weights([1, 1], [-1.0, 0.0])
+    with pytest.raises(ValueError, match="half_life"):
+        staleness_merge_weights([1, 1], [0.0, 0.0], half_life=-5.0)
+    with pytest.raises(ValueError, match="mismatch"):
+        staleness_merge_weights([1, 1], [0.0])
+
+
+def test_staleness_weighted_merge_matches_fedavg():
+    params, _ = build_model("mnist", jax.random.PRNGKey(0))
+    models = [jax.tree_util.tree_map(
+        lambda x, i=i: x + 0.01 * (i + 1), params) for i in range(3)]
+    sizes, stale, hl = [100, 200, 100], [0.0, 300.0, 600.0], 300.0
+    merged = staleness_weighted_merge(models, sizes, stale, half_life=hl)
+    ref = fedavg(models, list(staleness_merge_weights(sizes, stale, hl)))
+    for a, b in zip(jax.tree_util.tree_leaves(merged),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_single_region_merge_is_identity():
+    params, _ = build_model("mnist", jax.random.PRNGKey(0))
+    merged = staleness_weighted_merge([params], [10], [0.0])
+    assert merged is params
+    merged, w = staleness_weighted_merge([params], [10], [0.0],
+                                         return_weights=True)
+    assert merged is params
+    np.testing.assert_allclose(w, [1.0])
+
+
+def test_engine_run_zero_rounds_is_noop():
+    eng = SAGINEngine("multi_region", seed=0, n_devices=4, n_air=1)
+    traces = eng.run(0)
+    assert all(not t.records for t in traces)
+    assert eng.step_order == []
+    fl_eng = SAGINEngine(XR2, fl=tiny_cfg(scenario=None))
+    fl_eng.run(0)
+    assert not fl_eng.merges
+    assert all(not t.result.accuracies for t in fl_eng.trainers)
+    assert all(t.wall_clock == 0.0 for t in fl_eng.trainers)
+
+
+# ---------------------------------------------------------------------------
+# ISL merge pricing ---------------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_isl_merge_hops_topologies():
+    # hub never pays; star is a flat 2-hop round trip
+    assert isl_merge_hops("star", 0, 4) == 0
+    assert all(isl_merge_hops("star", i, 4) == 2 for i in (1, 2, 3))
+    # ring distance is circular
+    assert [isl_merge_hops("ring", i, 4) for i in range(4)] == [0, 2, 4, 2]
+    assert isl_merge_hops("ring", 5, 6) == 2
+    assert isl_merge_hops("ring", 0, 1) == 0
+    with pytest.raises(ValueError, match="topology"):
+        isl_merge_hops("mesh", 1, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        isl_merge_hops("ring", 4, 4)
+
+
+def test_global_merge_latency_prices_model_hops():
+    bits, z = 32e6, 3.125e6
+    assert global_merge_latency(bits, z, "star", 0, 4) == 0.0
+    assert global_merge_latency(bits, z, "star", 2, 4) == pytest.approx(
+        2 * tx_time(bits, z))
+    assert global_merge_latency(bits, z, "ring", 2, 4) == pytest.approx(
+        4 * tx_time(bits, z))
+
+
+def test_scenario_merge_field_validation():
+    with pytest.raises(ValueError, match="merge_every"):
+        Scenario(name="_bad_cadence", description="x", merge_every=0)
+    with pytest.raises(ValueError, match="merge_topology"):
+        Scenario(name="_bad_topo", description="x", merge_topology="mesh")
+    assert get_scenario("multi_region").merge_every is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine FL mode: event-stepped training + global merges --------------------
+# ---------------------------------------------------------------------------
+def test_engine_fl_mode_merges_into_one_global_model():
+    eng = SAGINEngine(XR2, fl=tiny_cfg(scenario=None))
+    eng.run(2)
+    assert len(eng.merges) == 2  # merge_every=1
+    assert eng.global_params is not None
+    last = eng.merges[-1]
+    assert last.barrier_round == 2
+    np.testing.assert_allclose(sum(last.weights), 1.0)
+    assert min(last.staleness) == 0.0 and all(s >= 0
+                                              for s in last.staleness)
+    # star topology: the hub region pays no ISL toll, the other a 2-hop
+    # round trip; both clocks end at merge time + their toll
+    t0, t1 = eng.trainers
+    assert last.isl_costs[0] == 0.0
+    assert last.isl_costs[1] == pytest.approx(
+        2 * t1.sagin.model_bits / t1.sagin.z_isl)
+    assert t0.wall_clock == pytest.approx(last.time)
+    assert t1.wall_clock == pytest.approx(last.time + last.isl_costs[1])
+    # every region ends on the SAME global model
+    for trainer in eng.trainers:
+        for a, b in zip(jax.tree_util.tree_leaves(trainer.params),
+                        jax.tree_util.tree_leaves(eng.global_params)):
+            np.testing.assert_array_equal(a, b)
+    # merged-model eval recorded per region
+    assert len(last.accuracies) == 2
+
+
+def test_engine_fl_merge_none_equals_independent_run_fl():
+    """Cadence None must exactly reproduce independent per-region
+    trajectories — the engine's shared propagation pass and event
+    interleaving change nothing about a region's own stream."""
+    scn = dataclasses.replace(XR2, merge_every=None)
+    cfg = tiny_cfg(scenario=None, n_rounds=2)
+    eng = SAGINEngine(scn, fl=cfg)
+    eng.run(2)
+    assert eng.global_params is None
+    assert not eng.merges
+    for i, region in enumerate(scn.regions):
+        solo = RegionTrainer(dataclasses.replace(cfg, region_index=i),
+                             scenario=scn)
+        for r in range(2):
+            solo.step(r)
+        got = eng.fl_results[region.name]
+        assert got.accuracies == solo.result.accuracies
+        assert got.latencies == solo.result.latencies
+        assert got.times == solo.result.times
+
+
+def test_engine_fl_mode_is_deterministic():
+    a = SAGINEngine(XR2, fl=tiny_cfg(scenario=None))
+    a.run(2)
+    b = SAGINEngine(XR2, fl=tiny_cfg(scenario=None))
+    b.run(2)
+    assert a.step_order == b.step_order
+    assert [m.weights for m in a.merges] == [m.weights for m in b.merges]
+    for x, y in zip(jax.tree_util.tree_leaves(a.global_params),
+                    jax.tree_util.tree_leaves(b.global_params)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_regions_share_task_and_init_but_not_samples():
+    """Mergeability contract: same class prototypes and initial model
+    across regions, different sample draws."""
+    cfg = tiny_cfg(scenario=None, n_rounds=1)
+    eng = SAGINEngine(XR2, fl=cfg)
+    t0, t1 = eng.trainers
+    assert not np.array_equal(t0.ds.x_train, t1.ds.x_train)
+    l0 = jax.tree_util.tree_leaves(
+        RegionTrainer(dataclasses.replace(cfg, region_index=0),
+                      scenario=XR2).params)
+    # note: trainers above already stepped 0 rounds; params are inits
+    for a, b in zip(jax.tree_util.tree_leaves(t0.params),
+                    jax.tree_util.tree_leaves(t1.params)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree_util.tree_leaves(t0.params), l0):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_multi_region_global_model_beats_independent():
+    """Acceptance: the merged global model's shared-eval accuracy is at
+    least the best independently trained region model's."""
+    import jax.numpy as jnp
+
+    from repro.data import make_dataset
+
+    cfg = FLConfig(dataset="mnist", n_devices=4, n_air=1, h_local=2,
+                   train_fraction=0.01, eval_size=256, seed=0)
+    scn = get_scenario("multi_region")
+    rounds = 6
+    merged_eng = SAGINEngine(scn, fl=cfg)
+    merged_eng.run(rounds)
+    indep_eng = SAGINEngine(dataclasses.replace(scn, merge_every=None),
+                            fl=cfg)
+    indep_eng.run(rounds)
+
+    # shared eval set: a fresh draw of the same task, unseen by anyone
+    ds = make_dataset("mnist", seed=cfg.seed, train_fraction=0.02,
+                      sample_seed=999)
+    x, y = jnp.asarray(ds.x_test[:1024]), jnp.asarray(ds.y_test[:1024])
+    apply_fn = merged_eng.trainers[0].apply_fn
+    _, g_acc = evaluate(apply_fn, merged_eng.global_params, x, y)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[t.params for t in indep_eng.trainers])
+    _, ind_accs = stacked_evaluate(apply_fn, stacked, x, y)
+    assert float(g_acc) >= float(jnp.max(ind_accs))
