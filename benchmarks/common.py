@@ -7,11 +7,16 @@ settings. Every benchmark prints ``name,us_per_call,derived`` CSV rows so
 """
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# Every row() call is also recorded here so benchmarks.run --json can
+# group rows per module and write the BENCH_*.json artifacts.
+ROWS: List[Dict[str, object]] = []
 
 
 def fl_common(**overrides):
@@ -53,4 +58,33 @@ def timeit_min(fn: Callable, n: int = 5, warmup: int = 1) -> float:
 
 
 def row(name: str, us: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def drain_rows() -> List[Dict[str, object]]:
+    """Pop and return every row recorded since the last drain."""
+    out = list(ROWS)
+    ROWS.clear()
+    return out
+
+
+def write_bench_json(path: str, rows: List[Dict[str, object]],
+                     smoke: bool = False) -> None:
+    """Write one BENCH_*.json perf artifact: rows + enough environment
+    metadata that a future PR can tell whether a delta is real."""
+    import jax
+    doc = {
+        "schema": "repro-bench/1",
+        "generated_unix": int(time.time()),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "smoke": bool(smoke),
+        "full": FULL,
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)", flush=True)

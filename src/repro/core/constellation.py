@@ -17,8 +17,11 @@ R_EARTH = 6371e3               # m
 OMEGA_EARTH = 7.2921159e-5     # rad/s
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class WalkerStar:
+    """Frozen (hashable) so derived geometry — the propagation engine's
+    basis GEMM operands — can be memoized per constellation; derive
+    variants with ``dataclasses.replace`` instead of mutating."""
     n_sats: int = 80
     n_planes: int = 5
     altitude: float = 800e3

@@ -11,6 +11,14 @@ Two entry points feed the FL round driver:
   Batches are drawn through ``batch_for_local_steps`` with the same RNG
   stream and call order as the sequential loop, which is what makes the
   two execution modes numerically equivalent at equal seeds.
+* ``build_bucketed_cohort`` — the size-bucketed planner on top of the
+  same batch draw: clients are partitioned by per-client batch width
+  into geometric buckets (powers of two times ``batch_align``), each
+  bucket padded only to ITS OWN width, so padded FLOPs are bounded by a
+  constant factor of real FLOPs instead of growing with pool skew as
+  the global-``Bmax`` layout does.  Bucket client counts are quantized
+  geometrically too (powers of two, floored at ``client_align``), which
+  keeps the set of compiled-step signatures tiny and drift-stable.
 """
 from __future__ import annotations
 
@@ -46,22 +54,33 @@ class BatchIterator:
         return self.x[sel], self.y[sel]
 
 
+def batch_width_for_pool(n_samples: int, n_steps: int,
+                         max_batch: int = 64) -> int:
+    """The per-step batch width B that ``batch_for_local_steps`` draws
+    for a pool of ``n_samples`` (paper: |D|/H per batch at the
+    satellite, capped for memory on ground devices but letting big
+    post-offloading pools use proportionally bigger batches so their
+    lambda-weighted gradients are not noise-dominated).  Exposed so
+    planners and benchmarks can size layouts without materializing any
+    batches; 0 for an empty pool."""
+    if n_samples <= 0:
+        return 0
+    b = int(np.ceil(n_samples / n_steps))
+    eff_cap = int(np.clip(max(max_batch, n_samples // (4 * n_steps)),
+                          max_batch, 8 * max_batch))
+    return int(np.clip(b, 1, eff_cap))
+
+
 def batch_for_local_steps(x: np.ndarray, y: np.ndarray, indices: np.ndarray,
                           n_steps: int, rng: np.random.Generator,
                           max_batch: int = 64):
-    """Split a node's pool into H mini-batches (paper: |D|/H per batch at the
-    satellite; capped for memory on ground devices). Returns stacked arrays
-    of shape (H, B, ...) padded by resampling when the pool is small."""
+    """Split a node's pool into H mini-batches (sizing rule in
+    ``batch_width_for_pool``). Returns stacked arrays of shape
+    (H, B, ...) padded by resampling when the pool is small."""
     indices = np.asarray(indices)
     if len(indices) == 0:
         return None
-    b = int(np.ceil(len(indices) / n_steps))
-    # paper: satellite batch = |D|/H. Cap for CPU memory, but let big pools
-    # (air/satellite after offloading) use proportionally bigger batches so
-    # their lambda-weighted gradients are not noise-dominated.
-    eff_cap = int(np.clip(max(max_batch, len(indices) // (4 * n_steps)),
-                          max_batch, 8 * max_batch))
-    b = int(np.clip(b, 1, eff_cap))
+    b = batch_width_for_pool(len(indices), n_steps, max_batch)
     order = rng.permutation(indices)
     need = n_steps * b
     reps = int(np.ceil(need / len(order)))
@@ -95,6 +114,26 @@ class CohortBatch:
         return self.xs.shape
 
 
+def _draw_client_batches(x: np.ndarray, y: np.ndarray,
+                         pools: Sequence[np.ndarray], n_steps: int,
+                         rng: np.random.Generator, max_batch: int):
+    """Draw every non-empty pool's (H, B_c) batch stack in canonical pool
+    order — the ONE place both cohort builders consume the round RNG, so
+    bucketed, global-Bmax and sequential execution see identical samples
+    at equal seeds."""
+    per_client: List[Tuple[np.ndarray, np.ndarray]] = []
+    sizes: List[int] = []
+    for idx in pools:
+        idx = np.asarray(idx)
+        if len(idx) == 0:
+            continue
+        out = batch_for_local_steps(x, y, idx, n_steps, rng,
+                                    max_batch=max_batch)
+        per_client.append(out)
+        sizes.append(len(idx))
+    return per_client, sizes
+
+
 def build_cohort(x: np.ndarray, y: np.ndarray,
                  pools: Sequence[np.ndarray], n_steps: int,
                  rng: np.random.Generator, max_batch: int = 64,
@@ -114,16 +153,8 @@ def build_cohort(x: np.ndarray, y: np.ndarray,
     client's batch, which is wasteful when pool sizes are heavily
     skewed.
     """
-    per_client: List[Tuple[np.ndarray, np.ndarray]] = []
-    sizes: List[int] = []
-    for idx in pools:
-        idx = np.asarray(idx)
-        if len(idx) == 0:
-            continue
-        out = batch_for_local_steps(x, y, idx, n_steps, rng,
-                                    max_batch=max_batch)
-        per_client.append(out)
-        sizes.append(len(idx))
+    per_client, sizes = _draw_client_batches(x, y, pools, n_steps, rng,
+                                             max_batch)
     if not per_client:
         return None
 
@@ -144,3 +175,154 @@ def build_cohort(x: np.ndarray, y: np.ndarray,
     out_sizes = np.zeros(c, dtype=np.int64)
     out_sizes[:len(sizes)] = sizes
     return CohortBatch(xs=xs, ys=ys, mask=mask, sizes=out_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Size-bucketed cohorts ------------------------------------------------------
+# ---------------------------------------------------------------------------
+def next_geometric(value: int, align: int) -> int:
+    """Smallest ``align * 2**k >= value`` (the geometric bucket grid)."""
+    b = max(1, int(align))
+    value = int(value)
+    while b < value:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """One width bucket of the partition produced by :func:`plan_buckets`.
+
+    ``members`` are positions into the canonical real-client order
+    (ground 0..K-1, air, satellite — the order both execution modes
+    share); the bucket's cohort tensor is padded to ``(c_bucket, H,
+    b_bucket, ...)``.
+    """
+    b_bucket: int               # padded batch width (align * 2^k)
+    c_bucket: int               # padded client count (>= len(members))
+    members: Tuple[int, ...]    # canonical-order client positions
+
+
+def plan_buckets(widths: Sequence[int], batch_align: int = 32,
+                 client_align: int = 4,
+                 merge_slack: float = 1.25) -> List[BucketPlan]:
+    """Partition clients into geometric batch-width buckets.
+
+    Every client lands in the bucket whose width is the smallest
+    ``batch_align * 2**k`` covering its batch; within a bucket the batch
+    padding is therefore < 2x for any client wider than ``batch_align``
+    (and bounded by ``batch_align`` absolutely for narrower ones).  The
+    client axis of each bucket is quantized to the same geometric grid
+    (``client_align * 2**k``) so pool-size drift between rounds re-uses
+    previously compiled step signatures instead of forcing a recompile
+    per distinct client count.
+
+    A greedy coalescing pass then merges a bucket into the next-wider
+    one whenever the joint layout costs at most ``merge_slack`` times
+    the separate layouts: near-uniform pools collapse back to a single
+    dispatch (bucketing must not tax the regime the global layout
+    already handles well), while skewed pools — where merging would
+    multiply the padding — stay split.  The constant-factor padding
+    bound only weakens by ``merge_slack``.
+    """
+    groups: dict = {}
+    for pos, w in enumerate(widths):
+        groups.setdefault(next_geometric(w, batch_align), []).append(pos)
+    align = max(1, int(client_align))
+
+    def cost(members, b):
+        return next_geometric(len(members), align) * b
+
+    merged: List[Tuple[int, List[int]]] = []       # (b_bucket, members)
+    for b in sorted(groups):
+        if merged:
+            b_prev, m_prev = merged[-1]
+            joint = m_prev + groups[b]
+            if cost(joint, b) <= merge_slack * (cost(m_prev, b_prev)
+                                                + cost(groups[b], b)):
+                merged[-1] = (b, joint)
+                continue
+        merged.append((b, list(groups[b])))
+    return [BucketPlan(b_bucket=b,
+                       c_bucket=next_geometric(len(m), align),
+                       members=tuple(sorted(m)))
+            for b, m in merged]
+
+
+@dataclasses.dataclass
+class BucketedCohort:
+    """A round's client batches partitioned into width-aligned buckets.
+
+    ``buckets[i]`` is a :class:`CohortBatch` padded to
+    ``plans[i].c_bucket`` clients by ``plans[i].b_bucket`` batch slots;
+    ``plans[i].members`` maps its leading real clients back to canonical
+    cohort order.  ``sizes`` are the real clients' pool sizes in that
+    canonical order (what eq.-(13) aggregation weights derive from).
+    """
+    buckets: List[CohortBatch]
+    plans: List[BucketPlan]
+    sizes: np.ndarray            # (n_real_clients,) canonical order
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def real_elements(self) -> int:
+        """Batch elements actually drawn (sum of H * B_c over clients)."""
+        return sum(int(np.sum(cb.mask)) for cb in self.buckets)
+
+    @property
+    def layout_elements(self) -> int:
+        """Batch elements the padded layout materializes and trains on."""
+        return sum(int(np.prod(cb.mask.shape)) for cb in self.buckets)
+
+    @property
+    def padding_ratio(self) -> float:
+        """layout / real elements — the padded-FLOPs overhead factor."""
+        real = self.real_elements
+        return float(self.layout_elements) / real if real else 1.0
+
+
+def build_bucketed_cohort(x: np.ndarray, y: np.ndarray,
+                          pools: Sequence[np.ndarray], n_steps: int,
+                          rng: np.random.Generator, max_batch: int = 64,
+                          batch_align: int = 32,
+                          client_align: int = 4
+                          ) -> "BucketedCohort | None":
+    """Gather heterogeneous pools into width-aligned sub-cohorts.
+
+    Batches are drawn exactly as :func:`build_cohort` draws them (same
+    RNG stream, same canonical pool order), then grouped by per-client
+    batch width via :func:`plan_buckets` — so the union of the buckets
+    holds the same samples as the global-``Bmax`` cohort while the
+    padded-element count stays within a constant factor of the real
+    element count regardless of pool skew.
+    """
+    per_client, sizes = _draw_client_batches(x, y, pools, n_steps, rng,
+                                             max_batch)
+    if not per_client:
+        return None
+    widths = [bx.shape[1] for bx, _ in per_client]
+    plans = plan_buckets(widths, batch_align=batch_align,
+                         client_align=client_align)
+    sample_shape = x.shape[1:]
+    buckets = []
+    for plan in plans:
+        xs = np.zeros((plan.c_bucket, n_steps, plan.b_bucket) + sample_shape,
+                      dtype=x.dtype)
+        ys = np.zeros((plan.c_bucket, n_steps, plan.b_bucket), dtype=y.dtype)
+        mask = np.zeros((plan.c_bucket, n_steps, plan.b_bucket),
+                        dtype=np.float32)
+        bucket_sizes = np.zeros(plan.c_bucket, dtype=np.int64)
+        for slot, pos in enumerate(plan.members):
+            bx, by = per_client[pos]
+            b = bx.shape[1]
+            xs[slot, :, :b] = bx
+            ys[slot, :, :b] = by
+            mask[slot, :, :b] = 1.0
+            bucket_sizes[slot] = sizes[pos]
+        buckets.append(CohortBatch(xs=xs, ys=ys, mask=mask,
+                                   sizes=bucket_sizes))
+    return BucketedCohort(buckets=buckets, plans=plans,
+                          sizes=np.asarray(sizes, dtype=np.int64))

@@ -1,18 +1,22 @@
 from .aggregation import (aggregation_weights, fedavg, fedavg_stacked,
-                          hierarchical_weighted_psum, staleness_merge_weights,
-                          staleness_weighted_merge)
+                          fedavg_stacked_multi, hierarchical_weighted_psum,
+                          staleness_merge_weights, staleness_weighted_merge)
 from .baselines import (ALL_SCHEMES, BASELINES, SCHEME_HOOKS,
                         compare_schemes, run_scheme)
-from .client import (cohort_local_update, cross_entropy, evaluate,
-                     local_update, masked_cross_entropy, masked_local_update,
-                     stacked_evaluate, vmapped_local_update)
+from .client import (cohort_local_update, cohort_round_step, cross_entropy,
+                     evaluate, local_update, masked_cross_entropy,
+                     masked_local_update, stacked_evaluate,
+                     vmapped_local_update)
+from .cohort_engine import CohortEngine, CohortEngineStats
 from .rounds import FLConfig, FLResult, RegionTrainer, run_fl
 
 __all__ = ["aggregation_weights", "fedavg", "fedavg_stacked",
-           "hierarchical_weighted_psum", "staleness_merge_weights",
-           "staleness_weighted_merge", "ALL_SCHEMES", "BASELINES",
-           "SCHEME_HOOKS", "compare_schemes", "run_scheme",
-           "cohort_local_update", "cross_entropy", "evaluate",
-           "local_update", "masked_cross_entropy", "masked_local_update",
-           "stacked_evaluate", "vmapped_local_update", "FLConfig",
-           "FLResult", "RegionTrainer", "run_fl"]
+           "fedavg_stacked_multi", "hierarchical_weighted_psum",
+           "staleness_merge_weights", "staleness_weighted_merge",
+           "ALL_SCHEMES", "BASELINES", "SCHEME_HOOKS", "compare_schemes",
+           "run_scheme", "cohort_local_update", "cohort_round_step",
+           "cross_entropy", "evaluate", "local_update",
+           "masked_cross_entropy", "masked_local_update",
+           "stacked_evaluate", "vmapped_local_update", "CohortEngine",
+           "CohortEngineStats", "FLConfig", "FLResult", "RegionTrainer",
+           "run_fl"]

@@ -5,6 +5,11 @@ Three implementations of the same weighted average:
 1. ``fedavg``            — host-side pytree einsum over a client list.
 2. ``fedavg_stacked``    — jitted over stacked client params; dispatches to
                            the Pallas ``fedavg_agg`` kernel on TPU.
+                           ``fedavg_stacked_multi`` is its multi-bucket
+                           form: one device-side call that concatenates
+                           the size-bucketed cohort engine's per-bucket
+                           stacks and aggregates the union (optionally
+                           donating the stacked buffers).
 3. ``hierarchical_psum`` — the mesh-native version used by the multi-pod
                            runner: lambda-weighted psum over the ``data``
                            axis (air-level aggregation) then the ``pod``
@@ -56,6 +61,40 @@ def fedavg_stacked(stacked_params, weights, interpret: bool = False):
         lambda leaf: agg_ops.weighted_aggregate(leaf, w,
                                                 interpret=interpret),
         stacked_params)
+
+
+def _fedavg_multi_impl(stacked_parts, weights, interpret: bool = False):
+    """Concatenate per-bucket stacked params along the client axis and
+    run ONE eq.-(13) weighted aggregate over the union — the device-side
+    reduction of the bucketed cohort engine (no host round-trip between
+    the bucket updates and the aggregate)."""
+    if len(stacked_parts) == 1:
+        stacked = stacked_parts[0]
+    else:
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0), *stacked_parts)
+    return fedavg_stacked(stacked, weights, interpret=interpret)
+
+
+_fedavg_multi = jax.jit(_fedavg_multi_impl, static_argnames=("interpret",))
+# Donating variant: the per-bucket stacked params are intermediates the
+# cohort engine owns, so their buffers can be consumed by the aggregate
+# (the new global params are written in place of the round's client
+# params).  Donation is a no-op warning on CPU, hence the split.
+_fedavg_multi_donated = jax.jit(_fedavg_multi_impl,
+                                static_argnames=("interpret",),
+                                donate_argnums=(0,))
+
+
+def fedavg_stacked_multi(stacked_parts: Sequence, weights,
+                         interpret: bool = False, donate: bool = False):
+    """eq. (13) over a tuple of stacked-param pytrees (one per size
+    bucket, leading client axes C_b) in a single compiled device-side
+    call; ``weights`` has length ``sum(C_b)`` in bucket order (padding
+    clients carry weight 0).  ``donate=True`` donates the stacked
+    buffers (only meaningful on accelerator backends)."""
+    fn = _fedavg_multi_donated if donate else _fedavg_multi
+    return fn(tuple(stacked_parts), weights, interpret=interpret)
 
 
 def staleness_merge_weights(sizes: Sequence[float],

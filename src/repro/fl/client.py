@@ -10,6 +10,12 @@ heterogeneous pool sizes can share one padded ``(C, H, Bmax, ...)`` cohort
 tensor. Masked slots contribute exactly zero loss and gradient, so a
 client's update equals what ``local_update`` computes on its unpadded
 batches (the numerical-equivalence contract of the batched engine).
+
+``cohort_round_step`` fuses ``cohort_local_update`` with the eq.-(13)
+aggregate into ONE compiled dispatch (the single-bucket fast path of
+:class:`repro.fl.cohort_engine.CohortEngine`); its ``_donated`` twin
+additionally donates the incoming params buffer so the global model is
+updated in place on accelerator backends.
 """
 from __future__ import annotations
 
@@ -111,6 +117,28 @@ def cohort_local_update(apply_fn: Callable, params, xs, ys, mask, lr):
         return masked_local_update(apply_fn, params, x, y, m, lr)
 
     return jax.vmap(one)(xs, ys, mask)
+
+
+def _cohort_round_impl(apply_fn: Callable, params, xs, ys, mask, weights,
+                       lr):
+    """Fused single-bucket round: local update + eq.-(13) aggregate in
+    one compiled call.  Returns (new_global_params, per-client losses)."""
+    from .aggregation import fedavg_stacked
+
+    def one(x, y, m):
+        return masked_local_update(apply_fn, params, x, y, m, lr)
+
+    stacked, losses = jax.vmap(one)(xs, ys, mask)
+    return fedavg_stacked(stacked, weights), losses
+
+
+cohort_round_step = jax.jit(_cohort_round_impl, static_argnums=(0,))
+# Donating variant of the fused round step: ``params`` is consumed and
+# the new global params are written in place (zero-copy round-to-round
+# model residency on accelerator backends; donation is a no-op warning
+# on CPU, hence the split).  Callers must not reuse the donated params.
+cohort_round_step_donated = jax.jit(_cohort_round_impl, static_argnums=(0,),
+                                    donate_argnums=(1,))
 
 
 @partial(jax.jit, static_argnums=(0,))

@@ -1,0 +1,156 @@
+"""Size-bucketed, device-resident cohort execution engine.
+
+The PR-1 batched path padded every client to the round's global
+``Bmax``: under the paper's adaptive offloading — which deliberately
+concentrates samples on the best-placed node — the cohort tensor
+becomes mostly zero-mask padding and the vmapped step burns its FLOPs
+on masked slots.  :class:`CohortEngine` replaces that layout with the
+geometric width buckets of
+:func:`repro.data.pipeline.build_bucketed_cohort`:
+
+* one compiled ``cohort_local_update`` dispatch per OCCUPIED bucket
+  (clients padded only to their own bucket's width, so padded elements
+  stay within a constant factor of real elements at any skew);
+* ONE device-side aggregate over the union of all buckets' stacked
+  params (:func:`repro.fl.aggregation.fedavg_stacked_multi`, the Pallas
+  ``fedavg_agg`` kernel path on TPU) — parameters never round-trip
+  through the host between local update and aggregation, and the
+  stacked buffers are donated on accelerator backends;
+* a bucket-signature cache keyed on ``(C_bucket, H, B_bucket,
+  sample_shape, dtype)``: because both bucket axes are quantized to
+  geometric grids, churn/offloading drift lands on already-seen
+  signatures and recompiles stay at ZERO after warm-up (the
+  ``signatures`` set is the engine's own bookkeeping; the actual
+  compilation cache is jax's jit cache, which the stable signatures
+  keep hitting).
+
+With donation enabled, the single-bucket case (uniform pools) takes a
+fused fast path — ``cohort_round_step_donated`` — that runs local
+update + aggregate in one compiled call with the params buffer donated,
+so the global model updates in place.
+
+Donation contract: with ``donate=True`` (default on non-CPU backends)
+:meth:`CohortEngine.round` CONSUMES the params argument — callers must
+replace their reference with the returned params and must not hand the
+same buffer to two consumers (``RegionTrainer`` keeps a private device
+copy for exactly this reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import BucketedCohort, build_bucketed_cohort
+
+from .aggregation import fedavg_stacked_multi
+from .client import cohort_local_update, cohort_round_step_donated
+
+
+@dataclasses.dataclass
+class CohortEngineStats:
+    """Cumulative counters over an engine's lifetime (all rounds)."""
+    rounds: int = 0
+    bucket_dispatches: int = 0
+    compiled_signatures: int = 0   # distinct bucket shapes seen so far
+    real_elements: int = 0         # batch elements actually drawn
+    layout_elements: int = 0       # batch elements the padded layout ran
+
+    @property
+    def padding_ratio(self) -> float:
+        """layout / real batch elements — padded-FLOPs overhead factor."""
+        return (self.layout_elements / self.real_elements
+                if self.real_elements else 1.0)
+
+
+class CohortEngine:
+    """Executes FL rounds over size-bucketed cohorts, device-resident.
+
+    One engine instance per FL job (``RegionTrainer`` owns one); the
+    instance carries the signature bookkeeping and perf counters across
+    rounds.  The compiled steps themselves live in jax's global jit
+    cache, so even a throwaway engine benefits from previously compiled
+    bucket signatures.
+    """
+
+    def __init__(self, apply_fn: Callable, batch_align: int = 32,
+                 client_align: int = 4, donate: Optional[bool] = None):
+        self.apply_fn = apply_fn
+        self.batch_align = max(1, int(batch_align))
+        self.client_align = max(1, int(client_align))
+        # buffer donation is unsupported on CPU (jax warns and ignores);
+        # default it off there and on everywhere else
+        self.donate = (jax.default_backend() != "cpu"
+                       if donate is None else bool(donate))
+        self.signatures: set = set()
+        self.stats = CohortEngineStats()
+
+    # -- cohort construction ------------------------------------------------
+    def build(self, x: np.ndarray, y: np.ndarray,
+              pools: Sequence[np.ndarray], n_steps: int,
+              rng: np.random.Generator, max_batch: int
+              ) -> Optional[BucketedCohort]:
+        """Plan + materialize this round's bucketed cohort (host side)."""
+        return build_bucketed_cohort(x, y, pools, n_steps, rng,
+                                     max_batch=max_batch,
+                                     batch_align=self.batch_align,
+                                     client_align=self.client_align)
+
+    # -- execution ----------------------------------------------------------
+    def _record(self, cohort: BucketedCohort):
+        for cb in cohort.buckets:
+            sig = cb.xs.shape + (str(cb.xs.dtype),)
+            self.signatures.add(sig)
+        st = self.stats
+        st.rounds += 1
+        st.bucket_dispatches += len(cohort.buckets)
+        st.compiled_signatures = len(self.signatures)
+        st.real_elements += cohort.real_elements
+        st.layout_elements += cohort.layout_elements
+
+    def round(self, params, cohort: BucketedCohort, lr: float,
+              total: int) -> Tuple[object, List[float]]:
+        """Train every bucket and aggregate — one FL round on device.
+
+        Returns ``(new_global_params, losses)`` with ``losses`` the real
+        clients' mean local losses in canonical cohort order.  With
+        ``self.donate`` the params argument is consumed (see module
+        docstring).
+        """
+        self._record(cohort)
+        lr = jnp.float32(lr)
+        # eq.-(13) weights over the concatenated client axis, bucket
+        # order; padding clients hold size 0 and therefore weight 0
+        w = np.concatenate([cb.sizes for cb in cohort.buckets])
+        weights = jnp.asarray(w / max(1, total), jnp.float32)
+
+        if len(cohort.buckets) == 1 and self.donate:
+            # fused fast path: local update + aggregate in ONE dispatch
+            # with the params buffer donated (in-place model update).
+            # Without donation the split path below wins — XLA:CPU
+            # schedules the two smaller programs better than one fused
+            # one, and there is no buffer to reuse anyway.
+            cb = cohort.buckets[0]
+            new_params, losses = cohort_round_step_donated(
+                self.apply_fn, params, jnp.asarray(cb.xs),
+                jnp.asarray(cb.ys), jnp.asarray(cb.mask), weights, lr)
+            loss_parts = [losses]
+        else:
+            stacked_parts, loss_parts = [], []
+            for cb in cohort.buckets:
+                stacked, losses = cohort_local_update(
+                    self.apply_fn, params, jnp.asarray(cb.xs),
+                    jnp.asarray(cb.ys), jnp.asarray(cb.mask), lr)
+                stacked_parts.append(stacked)
+                loss_parts.append(losses)
+            new_params = fedavg_stacked_multi(stacked_parts, weights,
+                                              donate=self.donate)
+
+        out = np.zeros(cohort.n_clients, dtype=np.float64)
+        for plan, losses in zip(cohort.plans, loss_parts):
+            vals = np.asarray(losses)[:len(plan.members)]
+            out[list(plan.members)] = vals
+        return new_params, [float(v) for v in out]

@@ -25,22 +25,24 @@ broadcast initial model for cross-region merges to be meaningful.
 
 Execution modes (``FLConfig.execution``):
 
-* ``"batched"`` — the cohort engine. Every data-holding node's (H, B)
-  batch stack is gathered into one padded, masked ``(C, H, Bmax, ...)``
-  cohort tensor (``repro.data.pipeline.build_cohort``), all C clients
-  train in a single compiled ``cohort_local_update`` step, and
-  aggregation runs over the stacked client axis via ``fedavg_stacked``
-  (the Pallas ``fedavg_agg`` kernel path on TPU). The client axis is
-  padded to the fixed cohort width ``n_devices + n_air + 1`` with
-  zero-mask, zero-weight dummies, and the batch axis is aligned up to a
-  multiple of ``cohort_batch_align``. Recompiles therefore happen only
-  when the round's LARGEST per-client batch crosses an alignment bucket
-  (as offloading concentrates data on one node), instead of once per
-  distinct ragged batch shape as in the sequential loop. Caveat: every
-  client pays the widest client's batch width — in heavily skewed
-  regimes (one huge satellite pool, many tiny devices) the cohort is
-  mostly zero-mask padding; size-bucketed sub-cohorts are the natural
-  extension if that regime dominates.
+* ``"batched"`` — the cohort engine
+  (:class:`repro.fl.cohort_engine.CohortEngine`). Every data-holding
+  node's (H, B) batch stack is drawn through the shared RNG stream and
+  partitioned into geometric batch-width buckets
+  (``repro.data.pipeline.build_bucketed_cohort``): each occupied bucket
+  trains in one compiled ``cohort_local_update`` dispatch padded only
+  to ITS OWN width, and all buckets' stacked params aggregate in a
+  single device-side ``fedavg_stacked_multi`` call (the Pallas
+  ``fedavg_agg`` kernel path on TPU) — no host round-trip of
+  parameters inside the round, stacked buffers donated on accelerator
+  backends. Both bucket axes are quantized to geometric grids
+  (``cohort_batch_align * 2^k`` batch slots,
+  ``cohort_client_align * 2^k`` clients), so churn/offloading drift
+  re-lands on already-compiled bucket signatures and recompiles stay at
+  zero after warm-up; padded FLOPs stay within a constant factor of
+  real FLOPs at ANY pool skew (the PR-1 global-``Bmax`` layout, kept as
+  ``cohort_bucketing="global"`` for comparison, degrades with skew
+  instead).
 * ``"sequential"`` — the reference loop: one ``local_update`` dispatch
   per node, host-side ``fedavg`` over a model list.
 * ``"auto"`` (default) — ``"batched"`` on accelerator backends where the
@@ -95,7 +97,9 @@ class FLConfig:
     scenario: Optional[str] = None   # named preset from repro.scenarios
     region_index: int = 0            # which scenario region this FL job serves
     execution: str = "auto"        # auto|batched|sequential (module docstring)
-    cohort_batch_align: int = 32   # batched mode: pad Bmax to this multiple
+    cohort_batch_align: int = 32   # batched mode: bucket-width grid unit
+    cohort_bucketing: str = "geometric"  # geometric|global (module docstring)
+    cohort_client_align: int = 4   # batched mode: bucket client-count grid
 
     def resolved_execution(self) -> str:
         if self.execution == "auto":
@@ -229,24 +233,45 @@ def _round_sequential(cfg: FLConfig, apply_fn, params, ds, node_pools,
 
 
 def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
-                   total, rng):
-    """Cohort engine: all clients in one compiled vmapped step, stacked
-    eq.-(13) aggregation (Pallas ``fedavg_agg`` path on TPU)."""
-    from repro.data.pipeline import build_cohort
-    cohort = build_cohort(ds.x_train, ds.y_train, node_pools, cfg.h_local,
-                          rng, max_batch=cfg.batch_cap,
-                          pad_clients=cfg.n_devices + cfg.n_air + 1,
-                          batch_align=cfg.cohort_batch_align)
+                   total, rng, engine=None):
+    """Cohort engine: size-bucketed compiled dispatches + one device-side
+    stacked eq.-(13) aggregation (Pallas ``fedavg_agg`` path on TPU).
+
+    ``engine`` is the job's persistent
+    :class:`~repro.fl.cohort_engine.CohortEngine` (``RegionTrainer``
+    owns one; ``None`` builds a throwaway — jax's jit cache still
+    de-duplicates compilation across throwaways).
+    ``cfg.cohort_bucketing="global"`` keeps the PR-1 single-cohort
+    global-``Bmax`` layout for comparison benchmarks.
+    """
+    if cfg.cohort_bucketing == "global":
+        from repro.data.pipeline import build_cohort
+        cohort = build_cohort(ds.x_train, ds.y_train, node_pools,
+                              cfg.h_local, rng, max_batch=cfg.batch_cap,
+                              pad_clients=cfg.n_devices + cfg.n_air + 1,
+                              batch_align=cfg.cohort_batch_align)
+        if cohort is None:
+            return params, []
+        stacked, client_losses = cohort_local_update(
+            apply_fn, params, jnp.asarray(cohort.xs),
+            jnp.asarray(cohort.ys), jnp.asarray(cohort.mask), cfg.lr)
+        weights = jnp.asarray(cohort.sizes / total, jnp.float32)
+        params = fedavg_stacked(stacked, weights)
+        valid = cohort.sizes > 0
+        losses = [float(l) for l in np.asarray(client_losses)[valid]]
+        return params, losses
+    if cfg.cohort_bucketing != "geometric":
+        raise ValueError(f"FLConfig.cohort_bucketing must be 'geometric' "
+                         f"or 'global', got {cfg.cohort_bucketing!r}")
+    if engine is None:
+        from .cohort_engine import CohortEngine
+        engine = CohortEngine(apply_fn, batch_align=cfg.cohort_batch_align,
+                              client_align=cfg.cohort_client_align)
+    cohort = engine.build(ds.x_train, ds.y_train, node_pools, cfg.h_local,
+                          rng, max_batch=cfg.batch_cap)
     if cohort is None:
         return params, []
-    stacked, client_losses = cohort_local_update(
-        apply_fn, params, jnp.asarray(cohort.xs), jnp.asarray(cohort.ys),
-        jnp.asarray(cohort.mask), cfg.lr)
-    weights = jnp.asarray(cohort.sizes / total, jnp.float32)
-    params = fedavg_stacked(stacked, weights)
-    valid = cohort.sizes > 0
-    losses = [float(l) for l in np.asarray(client_losses)[valid]]
-    return params, losses
+    return engine.round(params, cohort, cfg.lr, total)
 
 
 class RegionTrainer:
@@ -314,6 +339,19 @@ class RegionTrainer:
             raise ValueError(
                 f"FLConfig.execution must be 'auto', 'batched' or "
                 f"'sequential', got {cfg.execution!r}")
+        # Params live on device for the whole job (host conversion only
+        # at merge barriers and eval readouts).  The batched path gets a
+        # persistent cohort engine: its signature bookkeeping spans
+        # rounds, and with donation enabled (non-CPU backends) the round
+        # step consumes the params buffer — device_put up front makes
+        # that buffer privately owned by this trainer.
+        self.params = jax.device_put(self.params)
+        self.cohort_engine = None
+        if self.execution == "batched" and cfg.cohort_bucketing != "global":
+            from .cohort_engine import CohortEngine
+            self.cohort_engine = CohortEngine(
+                self.apply_fn, batch_align=cfg.cohort_batch_align,
+                client_align=cfg.cohort_client_align)
 
         self.result = FLResult(cfg, [], [], [], [], [], [])
         eval_idx = self.rng.choice(len(self.ds.x_test),
@@ -334,7 +372,15 @@ class RegionTrainer:
 
     def install_global(self, params, wall_clock: float):
         """Adopt the post-merge global model and post-merge clock; the
-        next :meth:`step` resumes local training from the global model."""
+        next :meth:`step` resumes local training from the global model.
+
+        The engine hands the SAME merged pytree to every region; when
+        this trainer's cohort engine donates buffers, its next round
+        would consume a buffer siblings still reference, so take a
+        private device copy first."""
+        if self.cohort_engine is not None and self.cohort_engine.donate:
+            params = jax.tree_util.tree_map(
+                lambda a: jnp.array(a, copy=True), params)
         self.params = params
         self.orch.wall_clock = wall_clock
 
@@ -355,7 +401,7 @@ class RegionTrainer:
         if self.execution == "batched":
             self.params, losses = _round_batched(
                 cfg, self.apply_fn, self.params, self.ds, node_pools,
-                total, self.rng)
+                total, self.rng, engine=self.cohort_engine)
         else:
             self.params, losses = _round_sequential(
                 cfg, self.apply_fn, self.params, self.ds, node_pools,

@@ -257,6 +257,9 @@ class SAGINEngine:
             costs.append(cost)
             _, acc = evaluate(t.apply_fn, merged, t.x_eval, t.y_eval)
             accs.append(float(acc))
+            # every region receives the SAME merged pytree; a trainer
+            # whose cohort engine donates buffers copies it privately
+            # inside install_global before its next round can consume it
             t.install_global(merged, t_merge + cost)
         self.global_params = merged
         self.merges.append(MergeEvent(

@@ -31,7 +31,8 @@ shapes); select explicitly with ``backend="numpy"|"jax"``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from functools import lru_cache
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -70,14 +71,25 @@ def resolve_backend(backend: str = "auto"):
 # ---------------------------------------------------------------------------
 # Batched geometry -----------------------------------------------------------
 # ---------------------------------------------------------------------------
+def _freeze(arr: np.ndarray) -> np.ndarray:
+    """Mark a memoized array read-only: cached basis operands are shared
+    across every caller, so accidental in-place edits must fail loudly."""
+    arr.flags.writeable = False
+    return arr
+
+
+@lru_cache(maxsize=128)
 def constellation_basis(ws: WalkerStar) -> np.ndarray:
     """Linear basis B, shape (2, n_sats, 3), with
     ``pos(t) = cos(nt) * B[0] + sin(nt) * B[1]``.
 
     Derived by angle addition on the argument of latitude
     ``u = u0 + n t`` of ``WalkerStar.positions_eci``; the basis is a
-    pure function of the constellation geometry, so propagating T time
-    samples is a (T, 2) @ (2, 3 n_sats) GEMM.
+    pure function of the (frozen, hashable) constellation geometry, so
+    it is memoized per constellation — the engine's event loop calls
+    into the propagation pass once per region step, and rebuilding the
+    GEMM operands each time was pure waste.  The returned array is
+    read-only.
     """
     inc = np.deg2rad(ws.inclination_deg)
     S, P = ws.sats_per_plane, ws.n_planes
@@ -98,13 +110,22 @@ def constellation_basis(ws: WalkerStar) -> np.ndarray:
     b1 = np.stack([a * (-su * cr - cu * ci * sr),
                    a * (-su * sr + cu * ci * cr),
                    a * cu * si], axis=-1)
-    return np.stack([b0.reshape(ws.n_sats, 3),
-                     b1.reshape(ws.n_sats, 3)])                  # (2,N,3)
+    return _freeze(np.stack([b0.reshape(ws.n_sats, 3),
+                             b1.reshape(ws.n_sats, 3)]))         # (2,N,3)
 
 
 def region_basis(regions: Sequence[Region]) -> np.ndarray:
     """Affine basis D, shape (R, 3, 3), with
-    ``tgt_r(t) = cos(Ot) * D[r, 0] + sin(Ot) * D[r, 1] + D[r, 2]``."""
+    ``tgt_r(t) = cos(Ot) * D[r, 0] + sin(Ot) * D[r, 1] + D[r, 2]``.
+
+    Memoized per region tuple (``Region`` is frozen/hashable); the
+    returned array is read-only.
+    """
+    return _region_basis_cached(tuple(regions))
+
+
+@lru_cache(maxsize=128)
+def _region_basis_cached(regions: Tuple[Region, ...]) -> np.ndarray:
     lat = np.deg2rad([r.lat_deg for r in regions])
     lon = np.deg2rad([r.lon_deg for r in regions])
     cl, sl = np.cos(lat), np.sin(lat)
@@ -113,7 +134,18 @@ def region_basis(regions: Sequence[Region]) -> np.ndarray:
     d0 = np.stack([R_EARTH * cl * co, R_EARTH * cl * so, zeros], axis=-1)
     d1 = np.stack([-R_EARTH * cl * so, R_EARTH * cl * co, zeros], axis=-1)
     d2 = np.stack([zeros, zeros, R_EARTH * sl], axis=-1)
-    return np.stack([d0, d1, d2], axis=1)                        # (R,3,3)
+    return _freeze(np.stack([d0, d1, d2], axis=1))               # (R,3,3)
+
+
+@lru_cache(maxsize=128)
+def _target_gram(ws: WalkerStar, regions: Tuple[Region, ...]) -> np.ndarray:
+    """Contracted basis G, shape (R, 6, n_sats) — the constant GEMM
+    operand of :func:`target_dots`, memoized per (constellation,
+    regions) pair.  Read-only."""
+    b = constellation_basis(ws)                                  # (2,N,3)
+    d = region_basis(regions)                                    # (R,3,3)
+    g = np.einsum("kns,rms->rkmn", b, d)                         # (R,2,3,N)
+    return _freeze(g.reshape(len(regions), 6, ws.n_sats))
 
 
 def positions_eci_batch(ws: WalkerStar, t: np.ndarray, xp=np):
@@ -144,16 +176,13 @@ def target_dots(ws: WalkerStar, regions: Sequence[Region], t: np.ndarray,
     bases — i.e. one (T, 6) @ (6, N) GEMM per region.
     """
     t = xp.atleast_1d(xp.asarray(np.asarray(t, dtype=np.float64)))
-    b = constellation_basis(ws)                                  # (2,N,3)
-    d = region_basis(regions)                                    # (R,3,3)
-    g = xp.asarray(np.einsum("kns,rms->rkmn", b, d))             # (R,2,3,N)
+    g = xp.asarray(_target_gram(ws, tuple(regions)))             # (R,6,N)
     w = ws.mean_motion
     c = xp.stack([xp.cos(w * t), xp.sin(w * t)], axis=-1)        # (T,2)
     e = xp.stack([xp.cos(OMEGA_EARTH * t), xp.sin(OMEGA_EARTH * t),
                   xp.ones_like(t)], axis=-1)                     # (T,3)
     f = (c[:, :, None] * e[:, None, :]).reshape(len(t), 6)       # (T,6)
-    n_sats = b.shape[1]
-    return f @ g.reshape(len(regions), 6, n_sats)                # (R,T,N)
+    return f @ g                                                 # (R,T,N)
 
 
 def sin_elevations(ws: WalkerStar, regions: Sequence[Region], t: np.ndarray,
@@ -196,6 +225,23 @@ def visibility(ws: WalkerStar, regions: Sequence[Region], t: np.ndarray,
 # ---------------------------------------------------------------------------
 # Vectorized interval extraction ---------------------------------------------
 # ---------------------------------------------------------------------------
+def _require_x64_for_intervals(xp) -> None:
+    """Interval extraction on the jax backend demands float64: without
+    x64 every ``xp.asarray(..., float64)`` silently downcasts to float32
+    and coverage-window boundaries shift by a ``dt`` sample depending on
+    the host.  Fail loudly instead."""
+    if xp is np:
+        return
+    import jax
+    if not jax.config.jax_enable_x64:
+        raise ValueError(
+            "access_intervals_multi with the jax backend requires "
+            "float64: call jax.config.update('jax_enable_x64', True) "
+            "before propagation, or use backend='numpy' (the default). "
+            "Without x64, visibility is computed in float32 and interval "
+            "boundaries silently shift by one dt sample.")
+
+
 def intervals_from_visibility(visible: np.ndarray,
                               t: np.ndarray) -> List[AccessInterval]:
     """Extract coverage windows from a (T, n_sats) visibility mask.
@@ -206,6 +252,10 @@ def intervals_from_visibility(visible: np.ndarray,
     open at the horizon), including the (start, sat) ordering.
     """
     v = np.asarray(visible, dtype=bool)
+    if not v.any():
+        # all-invisible mask (tight elevation mask, polar region, short
+        # horizon): skip the diff + double lexsort entirely
+        return []
     T, N = v.shape
     pad = np.zeros((1, N), dtype=np.int8)
     d = np.diff(v.astype(np.int8), axis=0, prepend=pad, append=pad)
@@ -232,8 +282,11 @@ def access_intervals_multi(ws: WalkerStar, regions: Sequence[Region],
     precision-critical control-plane state, and jax without x64 computes
     visibility in float32, which can shift a boundary by one ``dt``
     sample depending on the host.  Pass ``backend="jax"``/``"auto"`` to
-    opt in to accelerator-resident visibility.
+    opt in to accelerator-resident visibility — that path REQUIRES x64
+    (``jax.config.update("jax_enable_x64", True)``) and raises a clear
+    error otherwise, instead of silently shifting boundaries.
     """
+    _require_x64_for_intervals(resolve_backend(backend))
     t = np.arange(0.0, t_end, dt)
     vis = visibility(ws, regions, t, backend=backend)            # (R,T,N)
     return {r.name: intervals_from_visibility(vis[i], t)

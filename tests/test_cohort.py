@@ -15,8 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data.pipeline import batch_for_local_steps, build_cohort
-from repro.fl import FLConfig, fedavg, fedavg_stacked, run_fl
+from repro.data.pipeline import (batch_for_local_steps, build_bucketed_cohort,
+                                 build_cohort, next_geometric, plan_buckets)
+from repro.fl import (CohortEngine, FLConfig, fedavg, fedavg_stacked,
+                      fedavg_stacked_multi, run_fl)
 from repro.fl.client import (cohort_local_update, cross_entropy,
                              local_update, masked_cross_entropy)
 
@@ -161,6 +163,220 @@ def test_run_fl_batched_matches_sequential_trajectory():
     # orchestration (latency/plan side) is engine-independent
     assert bat.cases == seq.cases
     np.testing.assert_allclose(bat.latencies, seq.latencies, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# 2b. size-bucketed engine: planner geometry, equivalence, padding bound,
+#     zero recompiles after warm-up
+# ---------------------------------------------------------------------------
+def test_plan_buckets_geometry():
+    assert next_geometric(1, 8) == 8
+    assert next_geometric(8, 8) == 8
+    assert next_geometric(9, 8) == 16
+    assert next_geometric(100, 8) == 128
+    plans = plan_buckets([3, 8, 9, 64, 5], batch_align=8, client_align=4)
+    # the 8- and 16-wide groups coalesce (joint layout 4x16 = 64 beats
+    # separate 4x8 + 4x16 = 96); the 64-wide outlier stays its own bucket
+    assert [p.b_bucket for p in plans] == [16, 64]
+    assert [p.members for p in plans] == [(0, 1, 2, 4), (3,)]
+    # client counts quantized to the geometric grid, floored at align
+    assert [p.c_bucket for p in plans] == [4, 4]
+    many = plan_buckets([4] * 11, batch_align=8, client_align=4)
+    assert many[0].c_bucket == 16
+    # a merge-hostile slack keeps the pure geometric partition
+    pure = plan_buckets([3, 8, 9, 64, 5], batch_align=8, client_align=4,
+                        merge_slack=0.5)
+    assert [p.b_bucket for p in pure] == [8, 16, 64]
+    assert [p.members for p in pure] == [(0, 1, 4), (2,), (3,)]
+
+
+def test_bucketed_cohort_matches_sequential_rng_stream():
+    """The union of the buckets holds exactly the batches the sequential
+    loop (and the global-Bmax cohort) draws, in canonical order."""
+    x, y = _toy_data(n=600, seed=1)
+    h = 3
+    pools = [np.arange(0, 50), np.arange(50, 120), np.arange(120, 440)]
+    seq_rng = np.random.default_rng(42)
+    seq = [batch_for_local_steps(x, y, idx, h, seq_rng, max_batch=8)
+           for idx in pools]
+    cohort = build_bucketed_cohort(x, y, pools, h,
+                                   np.random.default_rng(42), max_batch=8,
+                                   batch_align=8)
+    assert cohort.n_clients == 3
+    np.testing.assert_array_equal(cohort.sizes,
+                                  [len(p) for p in pools])
+    located = 0
+    for plan, cb in zip(cohort.plans, cohort.buckets):
+        for slot, pos in enumerate(plan.members):
+            bx, by = seq[pos]
+            b = bx.shape[1]
+            np.testing.assert_array_equal(cb.xs[slot, :, :b], bx)
+            np.testing.assert_array_equal(cb.ys[slot, :, :b], by)
+            assert np.all(cb.mask[slot, :, :b] == 1.0)
+            assert np.all(cb.mask[slot, :, b:] == 0.0)
+            located += 1
+    assert located == 3
+    assert build_bucketed_cohort(x, y, [], h,
+                                 np.random.default_rng(0)) is None
+
+
+def test_cohort_engine_round_matches_sequential_loop():
+    """Bucketed execution == per-client local_update + host fedavg."""
+    x, y = _toy_data(n=1200, seed=3)
+    h, lr = 3, 0.1
+    # enough narrow clients that coalescing them into the 10x pool's
+    # bucket would multiply the padding -> genuinely multi-bucket
+    pools = [np.arange(k * 30, (k + 1) * 30) for k in range(6)]
+    pools.append(np.arange(200, 1100))
+    total = sum(len(p) for p in pools)
+    params = _mlp_init(jax.random.PRNGKey(0))
+    engine = CohortEngine(_mlp_apply, batch_align=8, client_align=4)
+    cohort = engine.build(x, y, pools, h, np.random.default_rng(7),
+                          max_batch=8)
+    assert len(cohort.buckets) > 1
+    new_params, losses = engine.round(params, cohort, lr, total)
+
+    seq_rng = np.random.default_rng(7)
+    ref_models, ref_weights, ref_losses = [], [], []
+    for idx in pools:
+        bx, by = batch_for_local_steps(x, y, idx, h, seq_rng, max_batch=8)
+        p, loss = local_update(_mlp_apply, params, jnp.asarray(bx),
+                               jnp.asarray(by), lr)
+        ref_models.append(p)
+        ref_weights.append(len(idx) / total)
+        ref_losses.append(float(loss))
+    ref = fedavg(ref_models, ref_weights)
+    for got, want in zip(jax.tree_util.tree_leaves(new_params),
+                         jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+    np.testing.assert_allclose(losses, ref_losses, atol=1e-5)
+    assert engine.stats.rounds == 1
+    assert engine.stats.bucket_dispatches == len(cohort.buckets)
+
+
+def test_cohort_engine_fused_donating_path_matches():
+    """The single-bucket fused step (donate=True fast path) computes the
+    same round as the split dispatch path.  Donation CONSUMES the params
+    argument, so the fused engine gets its own copy."""
+    x, y = _toy_data(n=400, seed=9)
+    h, lr = 3, 0.1
+    pools = [np.arange(0, 60), np.arange(60, 140), np.arange(140, 230)]
+    total = sum(len(p) for p in pools)
+    params = _mlp_init(jax.random.PRNGKey(4))
+    fused = CohortEngine(_mlp_apply, batch_align=8, donate=True)
+    split = CohortEngine(_mlp_apply, batch_align=8, donate=False)
+    c1 = fused.build(x, y, pools, h, np.random.default_rng(3), max_batch=16)
+    c2 = split.build(x, y, pools, h, np.random.default_rng(3), max_batch=16)
+    assert len(c1.buckets) == 1
+    own = jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), params)
+    p1, l1 = fused.round(own, c1, lr, total)
+    p2, l2 = split.round(params, c2, lr, total)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(l1, l2, atol=1e-6)
+
+
+def test_heavy_skew_padding_ratio_bounded():
+    """One 10x pool among many small ones: the global-Bmax layout pays
+    ~the widest client's batch for everyone, the bucketed layout stays
+    within a constant factor of the real element count."""
+    x, y = _toy_data(n=8000, seed=0)
+    h = 5
+    pools = [np.arange(k * 40, (k + 1) * 40) for k in range(31)]
+    pools.append(np.arange(1300, 1300 + 4000))      # the 10x offload target
+    cohort = build_bucketed_cohort(x, y, pools, h,
+                                   np.random.default_rng(0), max_batch=8,
+                                   batch_align=8)
+    glob = build_cohort(x, y, pools, h, np.random.default_rng(0),
+                        max_batch=8, batch_align=8, pad_clients=33)
+    real = cohort.real_elements
+    global_ratio = glob.mask.size / real
+    assert cohort.padding_ratio < 2.5          # constant-factor bound
+    assert global_ratio > 2 * cohort.padding_ratio
+    # both layouts drew identical batches for identical RNG streams
+    assert int(np.sum(glob.mask)) == real
+
+
+def test_zero_recompiles_after_warmup():
+    """Pool drift inside the geometric grid must not trigger recompiles:
+    after a warm-up round per signature set, further rounds hit jax's
+    jit cache exclusively."""
+    jtu = pytest.importorskip(
+        "jax._src.test_util",
+        reason="private jax test_util moved; recompile counter unavailable")
+    if not hasattr(jtu, "count_jit_and_pmap_lowerings"):
+        pytest.skip("count_jit_and_pmap_lowerings gone from jax test_util")
+
+    x, y = _toy_data(n=4000, seed=5)
+    h, lr = 3, 0.05
+    params = _mlp_init(jax.random.PRNGKey(1))
+    engine = CohortEngine(_mlp_apply, batch_align=8, client_align=4)
+
+    def pools_for(r, rng):
+        # drifting sizes: small pools wobble within one width bucket,
+        # the big pool grows (offloading) but stays inside its bucket
+        smalls = [np.asarray(rng.choice(3000, size=30 + 2 * ((r + k) % 3),
+                                        replace=False))
+                  for k in range(6)]
+        big = np.asarray(rng.choice(4000, size=900 + 40 * r, replace=False))
+        return smalls + [big]
+
+    rng = np.random.default_rng(11)
+    total = 5000
+    for r in range(3):                                   # warm-up rounds
+        cohort = engine.build(x, y, pools_for(r, rng), h,
+                              np.random.default_rng(r), max_batch=8)
+        params, _ = engine.round(params, cohort, lr, total)
+    jax.block_until_ready(jax.tree_util.tree_leaves(params))
+    sigs_after_warmup = set(engine.signatures)
+
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        for r in range(3, 8):
+            cohort = engine.build(x, y, pools_for(r, rng), h,
+                                  np.random.default_rng(r), max_batch=8)
+            params, _ = engine.round(params, cohort, lr, total)
+        jax.block_until_ready(jax.tree_util.tree_leaves(params))
+    assert count[0] == 0, f"{count[0]} recompiles after warm-up"
+    assert set(engine.signatures) == sigs_after_warmup
+
+
+def test_fedavg_stacked_multi_matches_single_stack():
+    params = _mlp_init(jax.random.PRNGKey(2))
+    models = []
+    for i in range(6):
+        key = jax.random.PRNGKey(20 + i)
+        models.append(jax.tree_util.tree_map(
+            lambda x: x + 0.05 * jax.random.normal(key, x.shape), params))
+    w = jnp.asarray([0.1, 0.15, 0.2, 0.25, 0.2, 0.1])
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+    ref = fedavg_stacked(stacked, w)
+    parts = (jax.tree_util.tree_map(lambda a: a[:2], stacked),
+             jax.tree_util.tree_map(lambda a: a[2:5], stacked),
+             jax.tree_util.tree_map(lambda a: a[5:], stacked))
+    got = fedavg_stacked_multi(parts, w)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.slow
+def test_run_fl_bucketed_matches_global_and_sequential():
+    """End-to-end: geometric bucketing preserves the numerical-
+    equivalence contract of the execution knob."""
+    common = dict(dataset="mnist", n_rounds=2, train_fraction=0.005,
+                  n_devices=4, n_air=1, h_local=2, eval_size=64, seed=5)
+    seq = run_fl(FLConfig(execution="sequential", **common))
+    buck = run_fl(FLConfig(execution="batched",
+                           cohort_bucketing="geometric", **common))
+    glob = run_fl(FLConfig(execution="batched",
+                           cohort_bucketing="global", **common))
+    np.testing.assert_allclose(buck.accuracies, seq.accuracies, atol=1e-3)
+    np.testing.assert_allclose(buck.losses, seq.losses, atol=1e-3)
+    np.testing.assert_allclose(buck.accuracies, glob.accuracies, atol=1e-3)
+    assert buck.cases == seq.cases
 
 
 # ---------------------------------------------------------------------------
