@@ -1,13 +1,22 @@
-"""Cross-region hierarchical FL benchmark: global merge vs independence.
+"""Cross-region hierarchical FL benchmark: federation-policy sweep.
 
-Event-steps the full ``multi_region`` training engine twice — once with
-the scenario's staleness-aware global merge over the ISLs, once with
-merging disabled (independent per-region models) — and reports:
+Part 1 (since PR 3): event-steps the full ``multi_region`` training
+engine twice — once with the scenario's synchronous staleness-aware
+global merge over the ISLs, once with merging disabled (independent
+per-region models) — and reports wall time per engine round, the
+simulated ISL overhead, and the shared-eval accuracy return on the ISL
+traffic.
 
-* wall time per engine round in both modes (the merge's compute cost),
-* the simulated ISL overhead the merges add to the regions' clocks,
-* final shared-eval accuracy of the global model vs the best and mean
-  independent region model (the accuracy return on the ISL traffic).
+Part 2 (PR 5): the federation-policy sweep.  Runs ``synchronous`` vs
+``soft_async`` vs ``partial`` (``repro.fl.federation``) on the
+``degraded_links`` dynamics stretched across the ``multi_region``
+continents and reports each policy's TIME-TO-TARGET-LOSS: the earliest
+simulated wall-clock at which EVERY region's train loss has reached the
+loosest loss any policy achieves (so the target is reachable by all).
+Under hostile ISLs the barrier policy drags every region to the slowest
+clock, while soft/partial merges keep regions off the barrier — the
+sweep quantifies that gap and gates on it (non-smoke).  Rows feed the
+``BENCH_federation.json`` artifact via ``benchmarks.run --json``.
 
     PYTHONPATH=src python -m benchmarks.cross_region [--smoke]
         [--rounds N] [--regions R] [--merge-every K]
@@ -18,12 +27,43 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import row, timeit  # noqa: E402
+
+SWEEP_POLICIES = ("synchronous", "soft_async", "partial")
+
+
+def _best_reachable_loss(results) -> float:
+    """Loosest train loss this run pins down: the worst, over regions,
+    of each region's best (minimum) participated-round loss."""
+    worst = 0.0
+    for res in results.values():
+        finite = [l for l, p in zip(res.losses, res.participated) if p]
+        if not finite:
+            return float("inf")
+        worst = max(worst, min(finite))
+    return worst
+
+
+def _time_to_loss(results, target: float) -> float:
+    """Earliest wall-clock at which EVERY region's train loss has
+    reached ``target`` (inf when any region never does)."""
+    worst = 0.0
+    for res in results.values():
+        hit = None
+        for t, loss, part in zip(res.times, res.losses, res.participated):
+            if part and loss <= target:
+                hit = t
+                break
+        if hit is None:
+            return float("inf")
+        worst = max(worst, hit)
+    return worst
 
 
 def main() -> int:
@@ -33,6 +73,7 @@ def main() -> int:
     from repro.data import make_dataset
     from repro.fl import FLConfig
     from repro.fl.client import evaluate, stacked_evaluate
+    from repro.fl.federation import FederationConfig
     from repro.scenarios import get_scenario
     from repro.sim import SAGINEngine
 
@@ -56,21 +97,26 @@ def main() -> int:
     scn = get_scenario("multi_region")
     scn = dataclasses.replace(scn, regions=scn.regions[:n_regions])
     if args.merge_every is not None:
-        scn = dataclasses.replace(scn, merge_every=args.merge_every or None)
+        fed = (None if args.merge_every == 0 else dataclasses.replace(
+            scn.resolved_federation() or FederationConfig(),
+            every=args.merge_every))
+        # merge_every=None too: a legacy base scenario must not resurrect
+        # its deprecated cadence through resolved_federation()
+        scn = dataclasses.replace(scn, federation=fed, merge_every=None)
     cfg = FLConfig(dataset="mnist", n_devices=devices, n_air=1, h_local=2,
                    train_fraction=fraction, eval_size=128, seed=0)
     tag = f"{n_regions}rx{rounds}"
 
     engines = {}
 
-    def run_mode(merge_every):
-        eng = SAGINEngine(dataclasses.replace(scn, merge_every=merge_every),
+    def run_mode(federation):
+        eng = SAGINEngine(dataclasses.replace(scn, federation=federation),
                           fl=cfg)
         eng.run(rounds)
         return eng
 
     us_global = timeit(lambda: engines.setdefault(
-        "global", run_mode(scn.merge_every)), n=1, warmup=0)
+        "global", run_mode(scn.federation)), n=1, warmup=0)
     us_indep = timeit(lambda: engines.setdefault(
         "indep", run_mode(None)), n=1, warmup=0)
     total_rounds = rounds * n_regions
@@ -81,6 +127,45 @@ def main() -> int:
         f"isl_overhead_s={isl_overhead:.1f}")
     row(f"cross_region.independent_{tag}", us_indep,
         f"us_per_round={us_indep / total_rounds:.0f}")
+
+    # ---- federation-policy sweep under degraded links ---------------------
+    # multi_region geography x degraded_links dynamics: frequent ISL
+    # fades are exactly the regime where barrier merges stall and the
+    # async/partial policies should win on time-to-target-loss.
+    sweep_scn = dataclasses.replace(
+        get_scenario("degraded_links"), name="degraded_links_multi",
+        regions=scn.regions, horizon=scn.horizon)
+    # Shorter simulated rounds (smaller per-region datasets) and more
+    # boundaries: the policies differ in per-boundary overhead (barrier
+    # waits + round-trip tolls vs one-way fetches vs quorum skips), so
+    # the sweep runs the regime where that overhead is a visible
+    # fraction of the round clock.  Cadence 2 keeps the policies
+    # statistically comparable (same merge information flow per round
+    # pair); going to every=1 instead rewards the barrier's stronger
+    # per-round mixing and measures learning dynamics, not overhead.
+    sweep_rounds = 4 if args.smoke else max(rounds, 8)
+    sweep_cfg = dataclasses.replace(cfg, train_fraction=fraction / 2)
+    half_life = 1200.0
+    sweep = {}
+    for pol in SWEEP_POLICIES:
+        fed = FederationConfig(policy=pol, every=2, topology="ring",
+                               half_life=half_life, quorum=0.5)
+        us = timeit(lambda f=fed, p=pol: sweep.setdefault(
+            p, run_mode_scn(sweep_scn, f, sweep_cfg, sweep_rounds)),
+            n=1, warmup=0)
+        sweep[pol + "_us"] = us
+    target = max(_best_reachable_loss(sweep[p].fl_results)
+                 for p in SWEEP_POLICIES)
+    sweep_tag = f"{n_regions}rx{sweep_rounds}"  # the sweep's OWN config
+    times_to_loss = {}
+    for pol in SWEEP_POLICIES:
+        eng = sweep[pol]
+        tt = _time_to_loss(eng.fl_results, target)
+        times_to_loss[pol] = tt
+        isl = sum(sum(m.isl_costs) for m in eng.merges)
+        row(f"federation.{pol}_{sweep_tag}", sweep[pol + "_us"],
+            f"time_to_loss_s={tt:.0f};target_loss={target:.4f};"
+            f"merges={len(eng.merges)};isl_overhead_s={isl:.1f}")
 
     # shared eval: a fresh sample draw of the same task, unseen by any
     # region, scoring the one global model against every independent one
@@ -103,11 +188,32 @@ def main() -> int:
     row(f"cross_region.shared_eval_{tag}", 0.0,
         f"global_acc={float(g_acc):.3f};best_indep={best:.3f};"
         f"mean_indep={mean:.3f}")
-    if not args.smoke and float(g_acc) < best:
-        print(f"cross_region: global model acc {float(g_acc):.3f} below "
-              f"best independent {best:.3f}", file=sys.stderr)
-        return 1
+    if not args.smoke:
+        if float(g_acc) < best:
+            print(f"cross_region: global model acc {float(g_acc):.3f} "
+                  f"below best independent {best:.3f}", file=sys.stderr)
+            return 1
+        tt_sync = times_to_loss["synchronous"]
+        lagging = [p for p in ("soft_async", "partial")
+                   if not times_to_loss[p] < tt_sync
+                   or math.isinf(times_to_loss[p])]
+        if lagging:
+            print(f"cross_region: {lagging} did not beat synchronous "
+                  f"time-to-target-loss {tt_sync:.0f}s "
+                  f"({ {p: round(times_to_loss[p]) for p in SWEEP_POLICIES} })",
+                  file=sys.stderr)
+            return 1
     return 0
+
+
+def run_mode_scn(scenario, federation, cfg, rounds):
+    """Run one policy variant of the sweep scenario to completion."""
+    import dataclasses as _dc
+
+    from repro.sim import SAGINEngine
+    eng = SAGINEngine(_dc.replace(scenario, federation=federation), fl=cfg)
+    eng.run(rounds)
+    return eng
 
 
 if __name__ == "__main__":

@@ -11,6 +11,10 @@ ones:
   ``fl_payload_scaling`` when it ran): the FL round-engine trajectory.
 * ``BENCH_sim.json``    — rows from ``sim_scale`` (and
   ``handover_dynamics`` when it ran): the propagation/engine trajectory.
+* ``BENCH_federation.json`` — rows from ``cross_region``: the
+  federation-policy sweep (synchronous vs soft_async vs partial
+  time-to-target-loss under degraded ISLs) plus the global-vs-
+  independent merge comparison.
 
 ``--smoke`` shrinks every module to CI sizes (exports
 ``REPRO_BENCH_SMOKE=1``) and restricts the run to the artifact-feeding
@@ -35,8 +39,9 @@ ARTIFACT_OF = {
     "fl_payload_scaling": "BENCH_cohort.json",
     "sim_scale": "BENCH_sim.json",
     "handover_dynamics": "BENCH_sim.json",
+    "cross_region": "BENCH_federation.json",
 }
-SMOKE_MODULES = ("sim_scale", "cohort_scaling")
+SMOKE_MODULES = ("sim_scale", "cohort_scaling", "cross_region")
 
 
 def _modules():
@@ -113,7 +118,8 @@ def main() -> None:
 
     if args.json:
         os.makedirs(args.out_dir, exist_ok=True)
-        for target in ("BENCH_cohort.json", "BENCH_sim.json"):
+        for target in ("BENCH_cohort.json", "BENCH_sim.json",
+                       "BENCH_federation.json"):
             feeders = [n for n, _ in _modules()
                        if ARTIFACT_OF.get(n) == target]
             ran = [n for n in feeders if n in rows_by_module]

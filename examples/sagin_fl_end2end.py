@@ -27,13 +27,16 @@ Multi-region modes
 ``--all-regions`` trains one INDEPENDENT model per region (the PR-2
 behavior).  ``--global-model`` instead event-steps every region through
 ``SAGINEngine`` and merges the region models into ONE global model over
-the inter-satellite links at the scenario's merge cadence, with
-staleness-discounted weights (regions reach merge barriers at different
-wall times); ``--merge-every N`` overrides the cadence (0 disables
-merging).  Example:
+the inter-satellite links under a pluggable federation policy
+(``repro.fl.federation``): ``--policy`` selects ``synchronous`` barrier
+merges, FedMeld-style ``soft_async`` dispersal, ``partial``
+quorum merges under ISL outages, or ``elected_hub`` aggregation;
+``--merge-every N`` overrides the cadence (0 disables merging).
+Example:
 
     PYTHONPATH=src python examples/sagin_fl_end2end.py \
-        --scenario multi_region --global-model --rounds 20
+        --scenario multi_region --global-model --rounds 20 \
+        --policy soft_async
 """
 import argparse
 import dataclasses
@@ -75,6 +78,11 @@ def main():
     ap.add_argument("--merge-every", type=int, default=None,
                     help="override the scenario's merge cadence in rounds "
                          "(0 disables merging)")
+    ap.add_argument("--policy", default=None,
+                    help="federation policy for --global-model: "
+                         "synchronous | soft_async | partial | elected_hub "
+                         "(default: the scenario's; see "
+                         "repro.fl.federation)")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -91,21 +99,35 @@ def main():
                   scenario=args.scenario)
 
     if args.scenario and args.global_model:
+        import math
+
+        from repro.fl.federation import FederationConfig
         from repro.sim import SAGINEngine
         scn = get_scenario(args.scenario)
-        if args.merge_every is not None:
-            scn = dataclasses.replace(
-                scn, merge_every=args.merge_every or None)
+        if args.merge_every is not None or args.policy:
+            fed = scn.resolved_federation() or FederationConfig(every=2)
+            if args.merge_every is not None:
+                fed = (None if args.merge_every == 0 else
+                       dataclasses.replace(fed, every=args.merge_every))
+            if args.policy and fed is not None:
+                fed = dataclasses.replace(fed, policy=args.policy)
+            # also null the deprecated merge_* fields: resolved_federation
+            # would resurrect them when fed is None (--merge-every 0 on a
+            # legacy scenario must really disable merging)
+            scn = dataclasses.replace(scn, federation=fed,
+                                      merge_every=None)
         eng = SAGINEngine(scn, fl=FLConfig(strategy="adaptive", **common))
         eng.run(args.rounds)
         for region, res in eng.fl_results.items():
             summarize(region, res, args.rounds)
         for m in eng.merges:
-            stale = max(m.staleness)
-            print(f"   merge @ round {m.barrier_round:>3d} t={m.time:9.0f} s"
-                  f" | max staleness {stale:7.1f} s"
+            accs = [a for a in m.accuracies if not math.isnan(a)]
+            print(f"   {m.policy:>11s} merge @ round {m.barrier_round:>3d} "
+                  f"t={m.time:9.0f} s"
+                  f" | hub {m.hub} | {len(m.participants)} region(s)"
+                  f" | max staleness {max(m.staleness):7.1f} s"
                   f" | isl cost {max(m.isl_costs):6.1f} s"
-                  f" | global acc {max(m.accuracies):.3f}")
+                  f" | global acc {max(accs):.3f}")
         if eng.global_params is None:
             print("   (merging disabled: independent per-region models)")
         return

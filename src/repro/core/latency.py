@@ -41,29 +41,43 @@ def handover_delay(model_bits: float, q_bits: float, n_samples: float,
 MERGE_TOPOLOGIES = ("ring", "star")
 
 
+def isl_path_hops(topology: str, src: int, dst: int, n_regions: int) -> int:
+    """One-way ISL hops between the serving satellites of two regions.
+
+    * ``"star"`` — every serving satellite has a direct ISL to every
+      other (one aggregation plane): 1 hop between distinct regions.
+    * ``"ring"`` — serving satellites form a ring in region order (the
+      natural Walker-Star cross-plane layout): circular distance.
+    """
+    for label, idx in (("src", src), ("dst", dst)):
+        if not 0 <= idx < n_regions:
+            raise ValueError(f"{label}={idx} out of range for "
+                             f"{n_regions} region(s)")
+    if src == dst:
+        return 0
+    if topology == "star":
+        return 1
+    if topology == "ring":
+        d = abs(src - dst)
+        return min(d, n_regions - d)
+    raise ValueError(f"unknown merge topology {topology!r}; "
+                     f"expected one of {MERGE_TOPOLOGIES}")
+
+
 def isl_merge_hops(topology: str, region_index: int, n_regions: int,
                    hub: int = 0) -> int:
     """ISL hops region ``region_index``'s model travels for one global
     merge: up to the aggregating satellite (the one serving region
-    ``hub``) and back down with the merged model.
-
-    * ``"star"`` — every region's serving satellite has a direct ISL to
-      the aggregator: 2 hops (up + down); the hub region pays 0.
-    * ``"ring"`` — serving satellites form a ring in region order (the
-      natural Walker-Star cross-plane layout): 2x the ring distance.
+    ``hub``) and back down with the merged model — twice the one-way
+    :func:`isl_path_hops` distance; the hub region pays 0.
     """
     if not 0 <= region_index < n_regions:
         raise ValueError(f"region_index={region_index} out of range for "
                          f"{n_regions} region(s)")
-    if n_regions <= 1 or region_index == hub % n_regions:
+    if n_regions <= 1:
         return 0
-    if topology == "star":
-        return 2
-    if topology == "ring":
-        d = abs(region_index - hub % n_regions)
-        return 2 * min(d, n_regions - d)
-    raise ValueError(f"unknown merge topology {topology!r}; "
-                     f"expected one of {MERGE_TOPOLOGIES}")
+    return 2 * isl_path_hops(topology, region_index, hub % n_regions,
+                             n_regions)
 
 
 def global_merge_latency(model_bits: float, z_isl: float, topology: str,

@@ -97,6 +97,26 @@ def fedavg_stacked_multi(stacked_parts: Sequence, weights,
     return fn(tuple(stacked_parts), weights, interpret=interpret)
 
 
+def fedavg_pytrees(params_list: List, weights,
+                   interpret: bool = False):
+    """eq. (13) over a python list of model pytrees via the DEVICE-side
+    path: stacks the models along a leading axis and dispatches to
+    :func:`fedavg_stacked` (the Pallas ``fedavg_agg`` kernel on TPU)
+    with float32 weights.  A single-model "merge" is the identity.
+
+    This is the one aggregation dispatch both
+    :func:`staleness_weighted_merge` and the federation policies'
+    ``MergePolicy.apply`` ride — keeping them bit-identical by
+    construction (the synchronous-policy golden lock depends on it).
+    """
+    if len(params_list) == 1:
+        return params_list[0]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *params_list)
+    return fedavg_stacked(stacked, jnp.asarray(weights, jnp.float32),
+                          interpret=interpret)
+
+
 def staleness_merge_weights(sizes: Sequence[float],
                             staleness: Sequence[float],
                             half_life: Optional[float] = None) -> np.ndarray:
@@ -106,6 +126,15 @@ def staleness_merge_weights(sizes: Sequence[float],
     lambda of eq. (13) lifted to whole regions, discounted for the age of
     each region's model at the merge instant.  ``half_life=None`` (or
     ``inf``) disables the discount — pure data-share FedAvg.
+
+    Edge semantics:
+
+    * ``half_life=0`` is a HARD cutoff: only the freshest models (those
+      at the minimum staleness — age 0 at a barrier) keep weight.
+    * If the discount drives EVERY weight to zero (all models many
+      half-lives stale, ``exp2`` underflow), the weights renormalize
+      over the freshest models' data shares instead of emitting
+      zero/NaN weights — a merge always redistributes unit mass.
     """
     w = np.asarray(sizes, dtype=np.float64)
     if np.any(w < 0) or w.sum() <= 0:
@@ -118,9 +147,19 @@ def staleness_merge_weights(sizes: Sequence[float],
     if np.any(s < 0):
         raise ValueError(f"staleness must be non-negative, got {list(s)}")
     if half_life is not None and np.isfinite(half_life):
-        if half_life <= 0:
-            raise ValueError(f"half_life must be positive, got {half_life}")
-        w = w * np.exp2(-s / half_life)
+        if half_life < 0:
+            raise ValueError(f"half_life must be non-negative, "
+                             f"got {half_life}")
+        if half_life == 0:
+            w = np.where(s == s.min(), w, 0.0)
+        else:
+            w = w * np.exp2(-s / half_life)
+    if w.sum() <= 0:
+        # all-stale underflow: fall back to data shares over the
+        # freshest model(s); if those hold no data, to plain data shares
+        w = np.where(s == s.min(), np.asarray(sizes, np.float64), 0.0)
+        if w.sum() <= 0:
+            w = np.asarray(sizes, np.float64)
     return w / w.sum()
 
 
@@ -141,13 +180,7 @@ def staleness_weighted_merge(params_list: List, sizes: Sequence[float],
         raise ValueError(f"{len(params_list)} models but "
                          f"{len(list(sizes))} sizes")
     w = staleness_merge_weights(sizes, staleness, half_life)
-    if len(params_list) == 1:
-        merged = params_list[0]
-    else:
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                         *params_list)
-        merged = fedavg_stacked(stacked, jnp.asarray(w, jnp.float32),
-                                interpret=interpret)
+    merged = fedavg_pytrees(params_list, w, interpret=interpret)
     return (merged, w) if return_weights else merged
 
 

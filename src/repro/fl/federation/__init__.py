@@ -1,0 +1,20 @@
+"""Pluggable federation policies for the cross-region merge.
+
+See ``repro.fl.federation.base`` for the API surface
+(:class:`FederationConfig`, :class:`FederationState`, :class:`MergePlan`,
+:class:`MergePolicy`, the registry) and
+``repro.fl.federation.policies`` for the built-ins (``synchronous``,
+``soft_async``, ``partial``, ``elected_hub``).
+"""
+from .base import (ELECTION_CRITERIA, FederationConfig, FederationState,
+                   MergePlan, MergePolicy, POLICIES, RegionFedState,
+                   get_policy, list_policies, register_policy,
+                   resolve_federation)
+from .policies import (ElectedHubPolicy, PartialPolicy, SoftAsyncPolicy,
+                       SynchronousPolicy)
+
+__all__ = ["ELECTION_CRITERIA", "FederationConfig", "FederationState",
+           "MergePlan", "MergePolicy", "POLICIES", "RegionFedState",
+           "get_policy", "list_policies", "register_policy",
+           "resolve_federation", "ElectedHubPolicy", "PartialPolicy",
+           "SoftAsyncPolicy", "SynchronousPolicy"]

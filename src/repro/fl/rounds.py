@@ -71,6 +71,7 @@ from repro.models.cnn import build_model, model_bits
 
 from .aggregation import fedavg, fedavg_stacked
 from .client import cohort_local_update, evaluate, local_update
+from .federation import FederationConfig, RegionFedState
 
 if TYPE_CHECKING:  # pragma: no cover - circular-import guard
     from repro.core.constellation import AccessInterval
@@ -100,6 +101,12 @@ class FLConfig:
     cohort_batch_align: int = 32   # batched mode: bucket-width grid unit
     cohort_bucketing: str = "geometric"  # geometric|global (module docstring)
     cohort_client_align: int = 4   # batched mode: bucket client-count grid
+    # Cross-region federation override for SAGINEngine FL mode: a
+    # FederationConfig replaces the scenario's wholesale; a bare policy
+    # name (e.g. "soft_async") keeps the scenario's cadence/topology/
+    # half-life and swaps only the policy; None defers to the scenario.
+    # Ignored by single-region run_fl (nothing to merge with).
+    federation: Optional["FederationConfig | str"] = None
 
     def resolved_execution(self) -> str:
         if self.execution == "auto":
@@ -117,11 +124,17 @@ class FLResult:
     accuracies: List[float]        # on this region's held-out eval batch
     losses: List[float]            # mean TRAIN loss across this round's
     #                              training nodes; NaN for a round in which
-    #                              no node held data (never silently the
-    #                              eval loss — consumers must nan-filter)
+    #                              no node trained (never silently the eval
+    #                              loss).  The NaN sentinel is kept for
+    #                              backward compatibility — consult
+    #                              ``participated`` instead of nan-sniffing.
     latencies: List[float]         # realized per-round latency
     cases: List[int]
     layer_portions: List[Dict[str, float]]  # data share per layer per round
+    # True when >= 1 node trained in the round (equivalently: losses[r]
+    # is finite).  The explicit mask downstream consumers should use for
+    # participation instead of inferring it from the NaN loss sentinel.
+    participated: List[bool] = dataclasses.field(default_factory=list)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         for t, a in zip(self.times, self.accuracies):
@@ -370,6 +383,24 @@ class RegionTrainer:
         """This region's data mass (constant: offloading conserves it)."""
         return self.pools.total()
 
+    def federation_snapshot(self, index: int) -> RegionFedState:
+        """This region's view for federation-policy planning: clock,
+        data mass, model payload, and the ISL state its dynamics
+        realized in the last completed round.  The trainer emits state;
+        merge SEMANTICS live entirely in ``repro.fl.federation``."""
+        events = (self.orch.records[-1].events if self.orch.records
+                  else None)
+        return RegionFedState(
+            index=index,
+            name=self.region.name if self.region is not None else str(index),
+            wall_clock=self.orch.wall_clock,
+            data_mass=float(self.total_samples),
+            model_bits=float(self.sagin.model_bits),
+            z_isl=float(self.sagin.z_isl),
+            isl_scale=(float(events.isl_scale) if events is not None
+                       else 1.0),
+            rounds_done=len(self.orch.records))
+
     def install_global(self, params, wall_clock: float):
         """Adopt the post-merge global model and post-merge clock; the
         next :meth:`step` resumes local training from the global model.
@@ -414,6 +445,7 @@ class RegionTrainer:
         res.accuracies.append(float(acc))
         res.losses.append(float(np.mean(losses)) if losses
                           else float("nan"))
+        res.participated.append(bool(losses))
         res.latencies.append(rec.realized_latency)
         res.cases.append(rec.plan.case)
         n_ground = sum(len(self.pools.ground_all(k))

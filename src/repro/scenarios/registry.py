@@ -15,9 +15,11 @@ lazily-built variants).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.constellation import AccessInterval, WalkerStar
+from repro.fl.federation import FederationConfig
 from repro.sim.dynamics import DynamicsConfig
 from repro.sim.propagation import Region, access_intervals_multi
 
@@ -43,15 +45,18 @@ class Scenario:
     strategy: str = "adaptive"
     # dynamics --------------------------------------------------------------
     dynamics: Optional[DynamicsConfig] = None
-    # cross-region merge (engine FL mode) -----------------------------------
-    # Every merge_every rounds, all regions rendezvous and their models
-    # are merged into ONE global model over the ISLs; None keeps regions
-    # fully independent (one model per region, the pre-merge behavior).
+    # cross-region federation (engine FL mode) ------------------------------
+    # The federation policy decides WHO merges WHAT, WHEN, at WHAT ISL
+    # price (repro.fl.federation): cadence, topology, staleness
+    # half-life, quorum, hub election.  None keeps regions fully
+    # independent (one model per region, the pre-merge behavior).
+    federation: Optional[FederationConfig] = None
+    # DEPRECATED: legacy spelling of federation=FederationConfig(
+    # policy="synchronous", every=..., topology=..., half_life=...).
+    # Kept as a shim — passing merge_every synthesizes the equivalent
+    # synchronous federation config and emits one DeprecationWarning.
     merge_every: Optional[int] = None
     merge_topology: str = "ring"            # "ring" | "star" ISL route
-    # staleness discount half-life (s): a region model that waited s
-    # seconds at the merge barrier keeps 2^(-s/half_life) of its data
-    # share; None = no discount (pure data-share FedAvg across regions)
     merge_half_life: Optional[float] = None
     # propagation window ----------------------------------------------------
     horizon: float = 48 * 3600.0
@@ -66,6 +71,32 @@ class Scenario:
             raise ValueError(f"{self.name}: merge_topology must be one of "
                              f"{MERGE_TOPOLOGIES}, got "
                              f"{self.merge_topology!r}")
+        # federation= wins outright over the legacy fields: replace()d
+        # copies of a legacy scenario keep merge_every around, so a
+        # both-set error would break dataclasses.replace(scn,
+        # federation=...) — the migration path itself
+        if self.merge_every is not None and self.federation is None:
+            warnings.warn(
+                f"Scenario merge_every/merge_topology/merge_half_life are "
+                f"deprecated; pass federation=FederationConfig("
+                f"policy='synchronous', every={self.merge_every}, "
+                f"topology={self.merge_topology!r}, "
+                f"half_life={self.merge_half_life}) instead",
+                DeprecationWarning, stacklevel=3)
+
+    def resolved_federation(self) -> Optional[FederationConfig]:
+        """The scenario's federation config, with the deprecated
+        ``merge_*`` fields mapped to the equivalent ``synchronous``
+        policy (trajectory-identical at equal seeds).  ``None`` means no
+        cross-region merging."""
+        if self.federation is not None:
+            return self.federation
+        if self.merge_every is None:
+            return None
+        return FederationConfig(policy="synchronous",
+                                every=self.merge_every,
+                                topology=self.merge_topology,
+                                half_life=self.merge_half_life)
 
     def build_constellation(self) -> WalkerStar:
         if self.n_sats % self.n_planes:
@@ -134,13 +165,16 @@ register(Scenario(
     description="One shared 80-sat constellation training ONE global FL "
                 "model across four continents: regions merge over the "
                 "ISL ring every 2 rounds with staleness-discounted "
-                "weights (set merge_every=None for independent models).",
+                "weights (set federation=None for independent models; "
+                "swap federation.policy for soft_async/partial/"
+                "elected_hub merges).",
     regions=(Region("indiana", 40.0, -86.0),
              Region("nairobi", -1.3, 36.8),
              Region("reykjavik", 64.1, -21.9),
              Region("sydney", -33.9, 151.2)),
     n_devices=20, n_air=2,
-    merge_every=2, merge_topology="ring", merge_half_life=3600.0,
+    federation=FederationConfig(policy="synchronous", every=2,
+                                topology="ring", half_life=3600.0),
     horizon=24 * 3600.0,
 ))
 

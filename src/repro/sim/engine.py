@@ -12,18 +12,20 @@ jobs would interleave them.
 
 **FL mode** (pass ``fl=FLConfig(...)``) replaces the bare orchestrators
 with full per-region trainers, so the engine event-steps *actual
-federated training*.  When the scenario configures a merge cadence
-(``Scenario.merge_every``), regions rendezvous every ``merge_every``
-rounds at a global merge barrier: each arriving region parks until all
-have arrived, then the region models are averaged into ONE global model
-with weights that combine each region's data share and a FedMeld-style
-staleness discount — a region whose model has been waiting at the
-barrier for ``s`` seconds (event-stepped clocks reach merge points at
-different wall times) contributes ``2^(-s / merge_half_life)`` of its
-share.  The merged model is priced over the inter-satellite links
-(:func:`repro.core.latency.global_merge_latency`): every region's clock
-advances to the merge time plus its topology-dependent ISL round trip
-before training resumes from the global model.
+federated training*.  Cross-region merging is delegated to a pluggable
+federation policy (:mod:`repro.fl.federation`), resolved from
+``FLConfig.federation`` or ``Scenario.federation`` (the deprecated
+``Scenario.merge_*`` fields map to the ``synchronous`` policy): at each
+merge boundary the engine EMITS a
+:class:`~repro.fl.federation.FederationState` (per-region clock/model
+age, data mass, live ISL state from ``sim.dynamics``) and executes
+whatever :class:`~repro.fl.federation.MergePlan` the policy returns —
+who participates with what staleness-discounted weight, who receives
+the merged model, and what each recipient's ISL toll is.  Barrier
+policies (``synchronous``, ``partial``, ``elected_hub``) park arriving
+regions until all have arrived; asynchronous policies (``soft_async``)
+plan at each region's own boundary with no parking.  The engine knows
+no merge semantics beyond that.
 
 Randomness is fully threaded and *region-addressable*: region ``i``'s
 orchestrator/dynamics streams are rooted at
@@ -106,13 +108,23 @@ class RegionTrace:
 
 @dataclasses.dataclass(frozen=True)
 class MergeEvent:
-    """One global staleness-aware merge across regions over the ISLs."""
+    """One policy-planned merge across regions over the ISLs.
+
+    The per-region tuples span ALL regions: a region that sat the merge
+    out carries weight/staleness/cost 0 and accuracy NaN (accuracies are
+    evaluated on recipients only).  ``participants``/``recipients``/
+    ``hub`` record the realized :class:`~repro.fl.federation.MergePlan`.
+    """
     barrier_round: int            # regions had completed this many rounds
-    time: float                   # merge wall-clock (last region's arrival)
+    time: float                   # merge wall-clock instant
     staleness: Tuple[float, ...]  # per-region model age at merge (s)
     weights: Tuple[float, ...]    # realized merge weights (sum to 1)
-    isl_costs: Tuple[float, ...]  # per-region ISL round-trip price (s)
-    accuracies: Tuple[float, ...]  # merged model on each region's eval set
+    isl_costs: Tuple[float, ...]  # per-region ISL price (s)
+    accuracies: Tuple[float, ...]  # merged model on recipients' eval sets
+    policy: str = "synchronous"   # federation policy that planned it
+    hub: int = 0                  # aggregating region (its satellite)
+    participants: Tuple[int, ...] = ()
+    recipients: Tuple[int, ...] = ()
 
 
 class SAGINEngine:
@@ -141,12 +153,15 @@ class SAGINEngine:
         self.trainers: List["RegionTrainer"] = []
         self.merges: List[MergeEvent] = []
         self.global_params = None
+        self.federation = None
         self.step_order: List[Tuple[int, int]] = []  # (region, round) pops
         self.traces: List[RegionTrace] = [RegionTrace(region=r)
                                           for r in scenario.regions]
         self.orchestrators: List[SAGINOrchestrator] = []
         if fl is not None:
+            from repro.fl.federation import resolve_federation
             from repro.fl.rounds import RegionTrainer
+            self.federation = resolve_federation(fl.federation, scenario)
             for i, region in enumerate(scenario.regions):
                 cfg_i = dataclasses.replace(fl, scenario=scenario.name,
                                             region_index=i)
@@ -172,8 +187,8 @@ class SAGINEngine:
         step the region with the earliest wall clock executes its next
         round (ties broken by region index for determinism; the pop
         sequence is recorded in ``self.step_order``).  In FL mode with a
-        merge cadence, regions additionally rendezvous at global merge
-        barriers (see :meth:`_global_merge`)."""
+        merge cadence, the federation policy additionally plans merges
+        at round boundaries (see :meth:`_policy_merge`)."""
         if self.trainers:
             return self._run_fl(n_rounds)
         self.step_order = []
@@ -192,9 +207,14 @@ class SAGINEngine:
         return self.traces
 
     def _run_fl(self, n_rounds: int) -> List[RegionTrace]:
-        """FL mode: event-step the region trainers; park regions arriving
-        at a merge barrier until the last one arrives, then merge."""
-        merge_every = self.scenario.merge_every
+        """FL mode: event-step the region trainers; at merge boundaries
+        consult the federation policy — barrier policies park regions
+        until all arrive, asynchronous policies plan per trigger."""
+        fed = self.federation
+        policy = None
+        if fed is not None and fed.every is not None:
+            from repro.fl.federation import get_policy
+            policy = get_policy(fed)
         self.step_order = []
         self.merges = []
         if n_rounds <= 0:
@@ -208,65 +228,81 @@ class SAGINEngine:
             trainer = self.trainers[i]
             self.traces[i].records.append(trainer.step(r))
             nxt = r + 1
-            at_barrier = (merge_every is not None
-                          and (nxt % merge_every == 0 or nxt == n_rounds))
-            if at_barrier:
+            at_boundary = (policy is not None
+                           and (nxt % fed.every == 0 or nxt == n_rounds))
+            if at_boundary and policy.requires_barrier:
                 waiting.append((i, nxt))
                 if len(waiting) == len(self.trainers):
-                    self._global_merge(nxt)
+                    self._policy_merge(policy, nxt)
                     for j, nr in waiting:
                         if nr < n_rounds:
                             heapq.heappush(
                                 heap, (self.trainers[j].wall_clock, j, nr))
                     waiting = []
-            elif nxt < n_rounds:
-                heapq.heappush(heap, (trainer.wall_clock, i, nxt))
-        if merge_every is None and self.trainers:
+            else:
+                if at_boundary:  # asynchronous boundary: no parking
+                    self._policy_merge(policy, nxt, trigger=i)
+                if nxt < n_rounds:
+                    heapq.heappush(heap, (trainer.wall_clock, i, nxt))
+        if policy is None and self.trainers:
             # no merging: the "global" model is undefined; expose None so
             # callers can tell one-global-model runs from independent ones
             self.global_params = None
         return self.traces
 
-    def _global_merge(self, barrier_round: int):
-        """Merge every region's model into one global model over the ISLs.
+    def federation_state(self, barrier_round: int,
+                         trigger: Optional[int] = None):
+        """Emit the :class:`~repro.fl.federation.FederationState` a
+        policy plans from: one snapshot per region (clock, data mass,
+        model payload, realized ISL state) plus the boundary context."""
+        from repro.fl.federation import FederationState
+        return FederationState(
+            config=self.federation,
+            regions=tuple(t.federation_snapshot(i)
+                          for i, t in enumerate(self.trainers)),
+            barrier_round=barrier_round, trigger=trigger)
 
-        The merge fires when the LAST region reaches the barrier; a
-        region that arrived earlier has an older model, discounted by
-        ``2^(-age / merge_half_life)`` on top of its data share
-        (FedMeld-style).  Each region then pays its topology-dependent
-        ISL round trip (:func:`repro.core.latency.global_merge_latency`)
-        before resuming from the merged model.
-        """
-        from repro.core.latency import global_merge_latency
-        from repro.fl.aggregation import staleness_weighted_merge
+    def _policy_merge(self, policy, barrier_round: int,
+                      trigger: Optional[int] = None):
+        """Plan one merge with the federation policy and execute it:
+        aggregate the participants' models, evaluate on and install to
+        the plan's recipients (clock := merge time + ISL toll), and
+        record the realized :class:`MergeEvent`.  A ``None`` plan skips
+        the merge — no models move, no clocks change."""
         from repro.fl.client import evaluate
 
-        scn = self.scenario
         trainers = self.trainers
-        t_merge = max(t.wall_clock for t in trainers)
-        staleness = [t_merge - t.wall_clock for t in trainers]
-        sizes = [t.total_samples for t in trainers]
-        merged, weights = staleness_weighted_merge(
-            [t.params for t in trainers], sizes, staleness,
-            half_life=scn.merge_half_life, return_weights=True)
-        costs, accs = [], []
-        for i, t in enumerate(trainers):
-            cost = global_merge_latency(
-                t.sagin.model_bits, t.sagin.z_isl, scn.merge_topology,
-                i, len(trainers))
-            costs.append(cost)
+        state = self.federation_state(barrier_round, trigger)
+        plan = policy.plan(state)
+        if plan is None:
+            return
+        merged = policy.apply([trainers[j].params
+                               for j in plan.participants], plan)
+        n = len(trainers)
+        weights = [0.0] * n
+        staleness = [0.0] * n
+        costs = [0.0] * n
+        accs = [float("nan")] * n
+        for j, w, s in zip(plan.participants, plan.weights, plan.staleness):
+            weights[j] = float(w)
+            staleness[j] = float(s)
+        for j, cost in zip(plan.recipients, plan.isl_costs):
+            t = trainers[j]
+            costs[j] = float(cost)
             _, acc = evaluate(t.apply_fn, merged, t.x_eval, t.y_eval)
-            accs.append(float(acc))
-            # every region receives the SAME merged pytree; a trainer
+            accs[j] = float(acc)
+            # every recipient receives the SAME merged pytree; a trainer
             # whose cohort engine donates buffers copies it privately
             # inside install_global before its next round can consume it
-            t.install_global(merged, t_merge + cost)
+            t.install_global(merged, plan.time + cost)
         self.global_params = merged
         self.merges.append(MergeEvent(
-            barrier_round=barrier_round, time=t_merge,
-            staleness=tuple(staleness), weights=tuple(float(w)
-                                                      for w in weights),
-            isl_costs=tuple(costs), accuracies=tuple(accs)))
+            barrier_round=barrier_round, time=plan.time,
+            staleness=tuple(staleness), weights=tuple(weights),
+            isl_costs=tuple(costs), accuracies=tuple(accs),
+            policy=plan.policy, hub=plan.hub,
+            participants=tuple(plan.participants),
+            recipients=tuple(plan.recipients)))
 
     # -- results ------------------------------------------------------------
     @property

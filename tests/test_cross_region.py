@@ -13,6 +13,7 @@ from repro.core.latency import (global_merge_latency, isl_merge_hops,
 from repro.fl import (FLConfig, RegionTrainer, fedavg, run_fl,
                       staleness_merge_weights, staleness_weighted_merge)
 from repro.fl.client import evaluate, stacked_evaluate
+from repro.fl.federation import FederationConfig
 from repro.models.cnn import build_model
 from repro.scenarios import SCENARIOS, Scenario, get_scenario, register
 from repro.sim import (DynamicsConfig, Region, SAGINEngine, region_seed,
@@ -26,8 +27,10 @@ TINY = dict(dataset="mnist", n_rounds=3, n_devices=4, n_air=1, h_local=2,
 XR2 = Scenario(
     name="_xr2", description="two-region merge test scenario",
     regions=(Region("indiana", 40.0, -86.0), Region("nairobi", -1.3, 36.8)),
-    n_devices=4, n_air=1, merge_every=1, merge_topology="star",
-    merge_half_life=600.0, horizon=6 * 3600.0)
+    n_devices=4, n_air=1,
+    federation=FederationConfig(policy="synchronous", every=1,
+                                topology="star", half_life=600.0),
+    horizon=6 * 3600.0)
 
 
 def tiny_cfg(**overrides):
@@ -67,6 +70,68 @@ def test_run_fl_reproduces_pre_refactor_trajectories(scenario):
     assert res.accuracies == gold["accuracies"]
     assert res.latencies == gold["latencies"]
     assert res.times == gold["times"]
+
+
+# Golden values captured from the pre-refactor SAGINEngine FL merge path
+# (commit 68ae01a) at XR2/TINY and the multi_region preset: the federation
+# API contract is that the `synchronous` policy reproduces the old
+# hard-coded barrier bit-identically at equal seeds.
+MERGE_GOLDEN_XR2 = {
+    "accuracies": {"indiana": [0.109375, 0.203125, 0.25],
+                   "nairobi": [0.109375, 0.171875, 0.21875]},
+    "times": {"indiana": [765.5785577775307, 1531.1571155550594,
+                          2304.5340183934213],
+              "nairobi": [764.7416746783683, 1538.955460615893,
+                          2312.332363454255]},
+    "merge0_weights": (0.5002417012981076, 0.49975829870189226),
+    "merge0_staleness": (0.0, 0.8368830991623781),
+    "merge0_isl_costs": (0.0, 8.63522816),
+    "merge0_accuracies": (0.109375, 0.046875),
+    "global_param_sum": -887.1842271846483,
+}
+MERGE_GOLDEN_MULTI = {
+    "indiana_times": [765.5785577775307, 1531.1571155550594],
+    "merge0_weights": (0.2500292871814325, 0.24994872361969697,
+                       0.250040785454496, 0.24998120374437455),
+    "merge0_isl_costs": (0.0, 8.63522816, 17.27045632, 8.63522816),
+    "global_param_sum": -965.3456731848983,
+}
+
+
+def _param_sum(params) -> float:
+    return float(sum(float(np.asarray(leaf, np.float64).sum())
+                     for leaf in jax.tree_util.tree_leaves(params)))
+
+
+def test_synchronous_policy_reproduces_pre_refactor_engine_golden():
+    """Tentpole lock: the extracted `synchronous` federation policy is
+    bit-identical to the pre-refactor hard-coded barrier merge."""
+    eng = SAGINEngine(XR2, fl=tiny_cfg(scenario=None))
+    eng.run(3)
+    gold = MERGE_GOLDEN_XR2
+    for name, res in eng.fl_results.items():
+        assert res.accuracies == gold["accuracies"][name]
+        assert res.times == gold["times"][name]
+    m = eng.merges[0]
+    assert m.policy == "synchronous" and m.hub == 0
+    assert m.participants == (0, 1) and m.recipients == (0, 1)
+    assert m.weights == gold["merge0_weights"]
+    assert m.staleness == gold["merge0_staleness"]
+    assert m.isl_costs == gold["merge0_isl_costs"]
+    assert m.accuracies == gold["merge0_accuracies"]
+    assert _param_sum(eng.global_params) == gold["global_param_sum"]
+
+
+def test_synchronous_policy_reproduces_multi_region_preset_golden():
+    eng = SAGINEngine("multi_region",
+                      fl=tiny_cfg(scenario=None, n_rounds=2))
+    eng.run(2)
+    gold = MERGE_GOLDEN_MULTI
+    assert eng.fl_results["indiana"].times == gold["indiana_times"]
+    m = eng.merges[0]
+    assert m.weights == gold["merge0_weights"]
+    assert m.isl_costs == gold["merge0_isl_costs"]
+    assert _param_sum(eng.global_params) == gold["global_param_sum"]
 
 
 def test_region_trainer_stepping_is_run_fl():
@@ -261,7 +326,9 @@ def test_scenario_merge_field_validation():
         Scenario(name="_bad_cadence", description="x", merge_every=0)
     with pytest.raises(ValueError, match="merge_topology"):
         Scenario(name="_bad_topo", description="x", merge_topology="mesh")
-    assert get_scenario("multi_region").merge_every is not None
+    fed = get_scenario("multi_region").resolved_federation()
+    assert fed is not None and fed.every == 2
+    assert fed.policy == "synchronous"
 
 
 # ---------------------------------------------------------------------------
@@ -298,7 +365,7 @@ def test_engine_fl_merge_none_equals_independent_run_fl():
     """Cadence None must exactly reproduce independent per-region
     trajectories — the engine's shared propagation pass and event
     interleaving change nothing about a region's own stream."""
-    scn = dataclasses.replace(XR2, merge_every=None)
+    scn = dataclasses.replace(XR2, federation=None)
     cfg = tiny_cfg(scenario=None, n_rounds=2)
     eng = SAGINEngine(scn, fl=cfg)
     eng.run(2)
@@ -359,7 +426,7 @@ def test_multi_region_global_model_beats_independent():
     rounds = 6
     merged_eng = SAGINEngine(scn, fl=cfg)
     merged_eng.run(rounds)
-    indep_eng = SAGINEngine(dataclasses.replace(scn, merge_every=None),
+    indep_eng = SAGINEngine(dataclasses.replace(scn, federation=None),
                             fl=cfg)
     indep_eng.run(rounds)
 

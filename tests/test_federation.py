@@ -1,0 +1,461 @@
+"""Federation-policy API tests: registry, the four built-in policies,
+deprecation shims, FLResult.participated, and staleness-weight edge
+cases (PR 5)."""
+import dataclasses
+import math
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.latency import (global_merge_latency, isl_merge_hops,
+                                isl_path_hops, tx_time)
+from repro.fl import FLConfig, fedavg, run_fl, staleness_merge_weights
+from repro.fl.federation import (FederationConfig, FederationState,
+                                 MergePolicy, RegionFedState, get_policy,
+                                 list_policies, register_policy,
+                                 resolve_federation)
+from repro.models.cnn import build_model
+from repro.scenarios import SCENARIOS, Scenario, get_scenario, register
+from repro.sim import DynamicsConfig, Region, SAGINEngine
+
+TINY = dict(dataset="mnist", n_rounds=2, n_devices=4, n_air=1, h_local=2,
+            train_fraction=0.005, eval_size=64, seed=0)
+
+REGIONS3 = (Region("indiana", 40.0, -86.0), Region("nairobi", -1.3, 36.8),
+            Region("reykjavik", 64.1, -21.9))
+
+
+def tiny_cfg(**overrides):
+    kw = dict(TINY)
+    kw.update(overrides)
+    return FLConfig(**kw)
+
+
+def make_state(masses, clocks, isl_scales=None, config=None, trigger=None,
+               model_bits=32e6, z_isl=3.125e6):
+    n = len(masses)
+    isl_scales = isl_scales if isl_scales is not None else [1.0] * n
+    regions = tuple(RegionFedState(
+        index=i, name=f"r{i}", wall_clock=float(clocks[i]),
+        data_mass=float(masses[i]), model_bits=model_bits, z_isl=z_isl,
+        isl_scale=float(isl_scales[i]), rounds_done=1) for i in range(n))
+    cfg = config if config is not None else FederationConfig(every=1)
+    return FederationState(config=cfg, regions=regions, barrier_round=1,
+                           trigger=trigger)
+
+
+def scenario3(fed, dynamics=None, name="_fed3"):
+    return Scenario(name=name, description="federation test",
+                    regions=REGIONS3, n_devices=4, n_air=1,
+                    federation=fed, dynamics=dynamics, horizon=6 * 3600.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry + config validation ----------------------------------------------
+# ---------------------------------------------------------------------------
+def test_registry_has_the_four_builtins():
+    assert {"synchronous", "soft_async", "partial",
+            "elected_hub"} <= set(list_policies())
+
+
+def test_get_policy_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown federation policy"):
+        get_policy(FederationConfig(policy="gossip"))
+
+
+def test_register_policy_rejects_duplicates_and_anonymous():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy
+        class Dup(MergePolicy):  # noqa: F811
+            name = "synchronous"
+    with pytest.raises(ValueError, match="non-empty name"):
+        @register_policy
+        class Anon(MergePolicy):
+            pass
+
+
+def test_federation_config_validation():
+    with pytest.raises(ValueError, match="every"):
+        FederationConfig(every=0)
+    with pytest.raises(ValueError, match="topology"):
+        FederationConfig(topology="mesh")
+    with pytest.raises(ValueError, match="quorum"):
+        FederationConfig(quorum=0.0)
+    with pytest.raises(ValueError, match="elect_by"):
+        FederationConfig(elect_by="alphabetical")
+
+
+def test_resolve_federation_precedence():
+    scn = scenario3(FederationConfig(policy="synchronous", every=2,
+                                     half_life=60.0))
+    # FLConfig None -> scenario's config
+    assert resolve_federation(None, scn) is scn.federation
+    # bare string swaps the policy, keeps the scenario knobs
+    fed = resolve_federation("soft_async", scn)
+    assert fed.policy == "soft_async" and fed.every == 2
+    assert fed.half_life == 60.0
+    # full config replaces wholesale
+    mine = FederationConfig(policy="partial", every=5)
+    assert resolve_federation(mine, scn) is mine
+    with pytest.raises(TypeError, match="federation"):
+        resolve_federation(3.14, scn)
+
+
+# ---------------------------------------------------------------------------
+# Policy planning -----------------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_synchronous_plan_matches_legacy_barrier_semantics():
+    cfg = FederationConfig(policy="synchronous", every=1, topology="ring",
+                           half_life=600.0)
+    state = make_state([100, 300, 100], [10.0, 40.0, 25.0], config=cfg)
+    plan = get_policy(cfg).plan(state)
+    assert plan.participants == (0, 1, 2) == plan.recipients
+    assert plan.hub == 0
+    assert plan.time == 40.0
+    assert plan.staleness == (30.0, 0.0, 15.0)
+    np.testing.assert_allclose(
+        plan.weights, staleness_merge_weights([100, 300, 100],
+                                              [30.0, 0.0, 15.0], 600.0))
+    expected = tuple(global_merge_latency(32e6, 3.125e6, "ring", i, 3)
+                     for i in range(3))
+    assert plan.isl_costs == expected
+
+
+def test_partial_plan_excludes_dead_isl_regions_and_renormalizes():
+    cfg = FederationConfig(policy="partial", every=1, topology="ring",
+                           quorum=0.5)
+    state = make_state([100, 300, 100], [10.0, 40.0, 25.0],
+                       isl_scales=[1.0, 0.25, 1.0], config=cfg)
+    plan = get_policy(cfg).plan(state)
+    assert plan.participants == (0, 2) == plan.recipients
+    assert plan.hub == 0
+    assert plan.time == 25.0               # max over PARTICIPANTS only
+    assert plan.staleness == (15.0, 0.0)
+    np.testing.assert_allclose(plan.weights, [0.5, 0.5])  # renormalized
+    assert sum(plan.weights) == pytest.approx(1.0)
+
+
+def test_partial_plan_hub_falls_back_to_lowest_live_region():
+    cfg = FederationConfig(policy="partial", every=1, quorum=0.5)
+    state = make_state([1, 1, 1], [0.0, 0.0, 0.0],
+                       isl_scales=[0.25, 1.0, 1.0], config=cfg)
+    plan = get_policy(cfg).plan(state)
+    assert plan.hub == 1
+    assert plan.participants == (1, 2)
+    assert plan.isl_costs[0] == 0.0        # hub pays nothing
+
+
+def test_partial_plan_skips_below_quorum():
+    cfg = FederationConfig(policy="partial", every=1, quorum=0.75)
+    state = make_state([1, 1, 1, 1], [0.0] * 4,
+                       isl_scales=[1.0, 1.0, 0.25, 0.25], config=cfg)
+    assert get_policy(cfg).plan(state) is None
+
+
+def test_soft_async_plan_is_trigger_only_with_clamped_staleness():
+    cfg = FederationConfig(policy="soft_async", every=1, topology="ring",
+                           half_life=600.0)
+    # trigger 1 at t=100; peer 0 behind (stale 60), peer 2 AHEAD (fresh)
+    state = make_state([100, 100, 100], [40.0, 100.0, 130.0], config=cfg,
+                       trigger=1)
+    plan = get_policy(cfg).plan(state)
+    assert plan.participants == (0, 1, 2)
+    assert plan.recipients == (1,)
+    assert plan.hub == 1
+    assert plan.time == 100.0
+    assert plan.staleness == (60.0, 0.0, 0.0)  # ahead-of-clock clamps to 0
+    # toll: slowest parallel one-way fetch over the ring
+    fetch = max(isl_path_hops("ring", j, 1, 3) * tx_time(32e6, 3.125e6)
+                for j in (0, 2))
+    assert plan.isl_costs == (fetch,)
+
+
+def test_soft_async_plan_none_without_live_peers():
+    cfg = FederationConfig(policy="soft_async", every=1)
+    state = make_state([1, 1], [0.0, 0.0], isl_scales=[1.0, 0.25],
+                       config=cfg, trigger=0)
+    assert get_policy(cfg).plan(state) is None
+    # trigger's own ISL down: keep training, no merge
+    state = make_state([1, 1], [0.0, 0.0], isl_scales=[0.25, 1.0],
+                       config=cfg, trigger=0)
+    assert get_policy(cfg).plan(state) is None
+    with pytest.raises(ValueError, match="trigger"):
+        get_policy(cfg).plan(make_state([1, 1], [0.0, 0.0], config=cfg))
+
+
+def test_elected_hub_by_data_mass_moves_the_toll():
+    cfg = FederationConfig(policy="elected_hub", every=1, topology="star",
+                           elect_by="data_mass")
+    state = make_state([100, 500, 100], [0.0, 0.0, 0.0], config=cfg)
+    plan = get_policy(cfg).plan(state)
+    assert plan.hub == 1
+    assert plan.isl_costs[1] == 0.0        # elected hub pays nothing
+    assert plan.isl_costs[0] > 0 and plan.isl_costs[2] > 0
+    assert plan.participants == (0, 1, 2) == plan.recipients
+
+
+def test_elected_hub_by_centrality_prefers_connected_regions():
+    cfg = FederationConfig(policy="elected_hub", every=1,
+                           elect_by="centrality")
+    # region 0 has the most data but its ISL is degraded; 1 and 2 tie on
+    # degree, 2 holds more data
+    state = make_state([900, 100, 200], [0.0, 0.0, 0.0],
+                       isl_scales=[0.25, 1.0, 1.0], config=cfg)
+    plan = get_policy(cfg).plan(state)
+    assert plan.hub == 2
+
+
+def test_isl_path_hops_primitive():
+    assert isl_path_hops("ring", 0, 0, 4) == 0
+    assert [isl_path_hops("ring", 0, j, 4) for j in range(4)] == [0, 1, 2, 1]
+    assert isl_path_hops("star", 0, 3, 4) == 1
+    assert isl_merge_hops("ring", 3, 4, hub=1) == \
+        2 * isl_path_hops("ring", 3, 1, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        isl_path_hops("ring", 4, 0, 4)
+    with pytest.raises(ValueError, match="topology"):
+        isl_path_hops("mesh", 0, 1, 4)
+
+
+def test_apply_matches_fedavg_and_identity():
+    cfg = FederationConfig(policy="synchronous", every=1)
+    policy = get_policy(cfg)
+    state = make_state([100, 300], [0.0, 0.0], config=cfg)
+    plan = policy.plan(state)
+    params, _ = build_model("mnist", jax.random.PRNGKey(0))
+    models = [jax.tree_util.tree_map(lambda x, i=i: x + 0.01 * (i + 1),
+                                     params) for i in range(2)]
+    merged = policy.apply(models, plan)
+    ref = fedavg(models, list(plan.weights))
+    for a, b in zip(jax.tree_util.tree_leaves(merged),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    solo = dataclasses.replace(plan, participants=(0,), weights=(1.0,),
+                               staleness=(0.0,))
+    assert policy.apply([params], solo) is params
+    with pytest.raises(ValueError, match="participants"):
+        policy.apply([params], plan)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration --------------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_engine_soft_async_merges_do_not_touch_peers():
+    scn = scenario3(FederationConfig(policy="soft_async", every=1,
+                                     half_life=600.0))
+    eng = SAGINEngine(scn, fl=tiny_cfg())
+    eng.run(2)
+    assert eng.merges, "healthy ISLs must yield soft merges"
+    for m in eng.merges:
+        assert m.policy == "soft_async"
+        assert len(m.recipients) == 1
+        assert m.hub == m.recipients[0]
+        # non-recipients carry no toll and no accuracy evaluation
+        for j in range(3):
+            if j not in m.recipients:
+                assert m.isl_costs[j] == 0.0
+                assert math.isnan(m.accuracies[j])
+    assert eng.global_params is not None
+
+
+def test_engine_partial_skips_and_shields_disconnected_regions():
+    dyn = DynamicsConfig(isl_outage_prob=0.5)
+    scn = scenario3(FederationConfig(policy="partial", every=1,
+                                     quorum=0.5), dynamics=dyn)
+    eng = SAGINEngine(scn, fl=tiny_cfg())
+    eng.run(2)
+    sync = scenario3(FederationConfig(policy="synchronous", every=1),
+                     dynamics=dyn, name="_fed3s")
+    eng_sync = SAGINEngine(sync, fl=tiny_cfg())
+    eng_sync.run(2)
+    # same dynamics streams: with outage_prob=0.5 some barrier saw a
+    # degraded region, so partial merged fewer region-slots overall
+    assert (sum(len(m.participants) for m in eng.merges)
+            < sum(len(m.participants) for m in eng_sync.merges))
+    for m in eng.merges:
+        assert m.policy == "partial"
+        assert set(m.recipients) == set(m.participants)
+        assert sum(m.weights) == pytest.approx(1.0)
+        for j in range(3):
+            if j not in m.participants:
+                assert m.weights[j] == 0.0 and m.isl_costs[j] == 0.0
+    # a region that sat a merge out was never dragged to the barrier:
+    # its clock can only be its own training time
+    for i, trace in enumerate(eng.traces):
+        if all(i not in m.participants for m in eng.merges):
+            assert eng.trainers[i].wall_clock == pytest.approx(
+                sum(r.realized_latency for r in trace.records))
+
+
+def test_engine_federation_none_means_independent():
+    scn = scenario3(None)
+    eng = SAGINEngine(scn, fl=tiny_cfg())
+    eng.run(2)
+    assert eng.merges == [] and eng.global_params is None
+
+
+def test_flconfig_federation_overrides_scenario_policy():
+    scn = scenario3(FederationConfig(policy="synchronous", every=1,
+                                     half_life=600.0))
+    eng = SAGINEngine(scn, fl=tiny_cfg(federation="soft_async"))
+    assert eng.federation.policy == "soft_async"
+    assert eng.federation.every == 1       # cadence kept from scenario
+    eng.run(1)
+    assert all(m.policy == "soft_async" for m in eng.merges)
+
+
+def test_engine_federation_runs_are_deterministic():
+    scn = scenario3(FederationConfig(policy="soft_async", every=1,
+                                     half_life=600.0),
+                    dynamics=DynamicsConfig(isl_outage_prob=0.3))
+    a = SAGINEngine(scn, fl=tiny_cfg())
+    a.run(2)
+    b = SAGINEngine(scn, fl=tiny_cfg())
+    b.run(2)
+    assert a.step_order == b.step_order
+    assert [m.participants for m in a.merges] == [m.participants
+                                                  for m in b.merges]
+    assert [m.weights for m in a.merges] == [m.weights for m in b.merges]
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims ---------------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_legacy_merge_kwargs_map_to_synchronous_federation():
+    with pytest.warns(DeprecationWarning, match="deprecated") as rec:
+        scn = Scenario(name="_legacy", description="x", regions=REGIONS3,
+                       merge_every=3, merge_topology="star",
+                       merge_half_life=120.0)
+    assert len(rec) == 1
+    fed = scn.resolved_federation()
+    assert fed == FederationConfig(policy="synchronous", every=3,
+                                   topology="star", half_life=120.0)
+
+
+def test_federation_wins_over_legacy_fields_without_warning():
+    """replace()ing federation onto a legacy scenario must work (the
+    migration path itself): federation= wins outright, no warning."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Scenario(name="_legacyR", description="x",
+                          regions=REGIONS3, merge_every=2)
+    fed = FederationConfig(policy="soft_async", every=5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        migrated = dataclasses.replace(legacy, federation=fed)
+    assert migrated.resolved_federation() is fed
+
+
+def test_disabling_merges_on_a_legacy_scenario_nulls_both_spellings():
+    """federation=None alone cannot disable a legacy scenario's merges —
+    resolved_federation() re-synthesizes from merge_every — so callers
+    (example/benchmark --merge-every 0) must null both fields."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Scenario(name="_legacyD", description="x",
+                          regions=REGIONS3, merge_every=2)
+        # replace() re-runs __post_init__, hence re-warns while the
+        # legacy field is still set — expected shim behavior
+        still_legacy = dataclasses.replace(legacy, federation=None)
+    assert still_legacy.resolved_federation() is not None
+    assert dataclasses.replace(
+        legacy, federation=None,
+        merge_every=None).resolved_federation() is None
+
+
+def test_policy_name_without_any_cadence_is_an_error():
+    """A bare policy name that would silently never merge must raise."""
+    scn = scenario3(None)  # no federation, no legacy cadence
+    with pytest.raises(ValueError, match="cadence"):
+        SAGINEngine(scn, fl=tiny_cfg(federation="soft_async"))
+    # a FULL config with every=None stays a legal explicit disable
+    eng = SAGINEngine(scn, fl=tiny_cfg(
+        federation=FederationConfig(policy="soft_async")))
+    eng.run(1)
+    assert eng.merges == [] and eng.global_params is None
+
+
+def test_legacy_kwargs_trajectory_identical_to_federation_config():
+    kw = dict(description="x", regions=REGIONS3[:2], n_devices=4, n_air=1,
+              horizon=6 * 3600.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Scenario(name="_shimL", merge_every=1,
+                          merge_topology="star", merge_half_life=600.0,
+                          **kw)
+    modern = Scenario(name="_shimM",
+                      federation=FederationConfig(policy="synchronous",
+                                                  every=1, topology="star",
+                                                  half_life=600.0), **kw)
+    a = SAGINEngine(legacy, fl=tiny_cfg())
+    a.run(2)
+    b = SAGINEngine(modern, fl=tiny_cfg())
+    b.run(2)
+    for ra, rb in zip(a.fl_results.values(), b.fl_results.values()):
+        assert ra.accuracies == rb.accuracies
+        assert ra.times == rb.times
+    assert [m.weights for m in a.merges] == [m.weights for m in b.merges]
+    for x, y in zip(jax.tree_util.tree_leaves(a.global_params),
+                    jax.tree_util.tree_leaves(b.global_params)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# FLResult.participated -----------------------------------------------------
+# ---------------------------------------------------------------------------
+def test_participated_mask_tracks_training_rounds():
+    scn = Scenario(name="_churn_all", description="x",
+                   dynamics=DynamicsConfig(churn_prob=1.0))
+    register(scn)
+    try:
+        res = run_fl(tiny_cfg(scenario="_churn_all", n_rounds=1))
+    finally:
+        SCENARIOS.pop("_churn_all", None)
+    assert res.participated == [False]
+    assert math.isnan(res.losses[0])       # NaN sentinel kept (documented)
+    ok = run_fl(tiny_cfg(scenario="paper", n_rounds=2))
+    assert ok.participated == [True, True]
+    assert all(np.isfinite(ok.losses))
+
+
+# ---------------------------------------------------------------------------
+# staleness_merge_weights edge cases ----------------------------------------
+# ---------------------------------------------------------------------------
+def test_half_life_zero_is_a_hard_cutoff():
+    w = staleness_merge_weights([100, 300, 100], [0.0, 0.0, 5.0],
+                                half_life=0.0)
+    np.testing.assert_allclose(w, [0.25, 0.75, 0.0])
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_all_stale_renormalizes_over_the_freshest():
+    # deep underflow: every exp2 weight hits 0.0 — must renormalize to
+    # the freshest model's data shares, never emit zeros/NaN
+    w = staleness_merge_weights([100, 300], [1e9, 1e9 + 5.0],
+                                half_life=1.0)
+    np.testing.assert_allclose(w, [1.0, 0.0])
+    w = staleness_merge_weights([100, 300], [1e9, 1e9], half_life=1.0)
+    np.testing.assert_allclose(w, [0.25, 0.75])
+
+
+def test_single_region_degenerate_merge_weight_is_one():
+    w = staleness_merge_weights([42], [1e9], half_life=1.0)
+    np.testing.assert_allclose(w, [1.0])
+    from repro.fl import staleness_weighted_merge
+    params, _ = build_model("mnist", jax.random.PRNGKey(0))
+    merged, wts = staleness_weighted_merge([params], [42], [1e9],
+                                           half_life=1.0,
+                                           return_weights=True)
+    assert merged is params
+    np.testing.assert_allclose(wts, [1.0])
+
+
+def test_freshest_with_zero_mass_falls_back_to_data_shares():
+    w = staleness_merge_weights([0, 300], [0.0, 1e9], half_life=1.0)
+    np.testing.assert_allclose(w, [0.0, 1.0])
+
+
+def test_get_scenario_registry_untouched_by_federation_tests():
+    assert get_scenario("degraded_links").resolved_federation() is None
