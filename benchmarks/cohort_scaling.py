@@ -27,6 +27,15 @@ Pools DRIFT between rounds (offloading churn).  Round 1 is the
 warmup/compile round; headline numbers are means over the remaining
 rounds.  Rows feed ``BENCH_cohort.json`` via ``benchmarks.run --json``.
 
+The bucketed engine runs with ``guard=True``: every round whose bucket
+layout is already warm executes under
+``repro.analysis.contracts.no_recompile()``, so a recompile regression
+on the steady-state path fails the bench lane with a
+``ContractViolation`` naming the round instead of silently inflating
+the timings.  (The guard is exact — zero lowerings allowed — and
+self-gating: rounds that legitimately introduce a new bucket signature
+under drift stay unguarded.)
+
 Usage:
   PYTHONPATH=src python -m benchmarks.cohort_scaling
   PYTHONPATH=src python -m benchmarks.cohort_scaling --regime skewed \
@@ -37,6 +46,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import os
 import sys
 import time
@@ -47,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import batch_width_for_pool, plan_buckets
+from repro.fl.cohort_engine import CohortEngine
 from repro.fl.rounds import FLConfig, _round_batched, _round_sequential
 
 from .common import row
@@ -197,7 +208,13 @@ def bench_cohort(c, payload="logreg", regime="skewed", h=5, batch_cap=8,
 
     cfg_buck = dataclasses.replace(cfg, cohort_bucketing="geometric")
     cfg_glob = dataclasses.replace(cfg, cohort_bucketing="global")
-    t_buck = run(_round_batched, cfg_buck)
+    # persistent engine with the recompile contract armed: warm-layout
+    # rounds that lower anything fail the bench (module docstring)
+    guarded = CohortEngine(apply_fn, batch_align=cfg.cohort_batch_align,
+                           client_align=cfg.cohort_client_align,
+                           guard=True)
+    t_buck = run(functools.partial(_round_batched, engine=guarded),
+                 cfg_buck)
     t_glob = run(_round_batched, cfg_glob)
     t_seq = run(_round_sequential, cfg) if seq else None
     # the timed global path pads clients to n_devices + n_air + 1 = c + 1

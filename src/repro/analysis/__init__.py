@@ -1,0 +1,26 @@
+"""JAX-aware static analysis + runtime contracts for the repro codebase.
+
+Two halves, one invariant set:
+
+* :mod:`repro.analysis.rules` / :mod:`repro.analysis.engine` — an
+  AST-based linter (``python -m repro.analysis``) catching RNG
+  indiscipline, recompile hazards, donation bugs, and host-sync smells
+  *before* they run.
+* :mod:`repro.analysis.contracts` — runtime context managers
+  (``no_recompile``, ``assert_donated``, ``nan_tripwire``) asserting
+  the same invariants *while* they run, used by ``CohortEngine``, the
+  benchmark runners, and the test suite.
+"""
+from .engine import classify, discover, scan
+from .findings import (DEFAULT_BASELINE, ERROR, WARNING, Finding,
+                       apply_baseline, load_baseline, render_json,
+                       render_text, sort_findings, write_baseline)
+from .rules import RULES, Rule
+
+__all__ = [
+    "classify", "discover", "scan",
+    "DEFAULT_BASELINE", "ERROR", "WARNING", "Finding",
+    "apply_baseline", "load_baseline", "render_json", "render_text",
+    "sort_findings", "write_baseline",
+    "RULES", "Rule",
+]

@@ -1,0 +1,175 @@
+"""Runtime contracts: the linter's invariants, enforced while running.
+
+Three reusable context managers, generalizing the PR-4 recompile lock so
+``CohortEngine``, ``RegionTrainer``, the benchmark runners, and the test
+suite all assert the same invariants through one door:
+
+* :func:`no_recompile` — no (or at most ``allow``) new jit lowerings
+  inside the block.  Backed by jax's internal lowering counters with a
+  version-tolerant fallback chain; degrades to an inert pass-through
+  (with a warning) rather than breaking when jax internals move.
+* :func:`assert_donated` — every watched buffer was actually consumed
+  by a ``donate_argnums`` position inside the block.  On backends where
+  donation is a documented no-op (CPU) the failure downgrades to a
+  warning unless ``strict=True``.
+* :func:`nan_tripwire` — flips ``jax_debug_nans`` / ``jax_debug_infs``
+  for the block so non-finite values raise at the producing op instead
+  of corrupting a merge rounds later.
+
+Violations raise :class:`ContractViolation` (an ``AssertionError``
+subclass, so pytest reports them natively).
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+from typing import Iterator, Optional
+
+import jax
+
+
+class ContractViolation(AssertionError):
+    """A runtime invariant asserted by repro.analysis.contracts failed."""
+
+
+# ---------------------------------------------------------------------------
+# no_recompile
+# ---------------------------------------------------------------------------
+class RecompileCount:
+    """Live view of the lowering count inside a ``no_recompile`` block."""
+
+    def __init__(self, box=None):
+        self._box = box        # jtu counter list, or None when unavailable
+        self.enforced = box is not None
+
+    @property
+    def count(self) -> int:
+        return int(self._box[0]) if self._box is not None else 0
+
+
+def _lowering_counter():
+    """Best available jit-lowering counter from jax's test utilities.
+
+    Ordered by fidelity; each is a context manager yielding a one-element
+    list holding the event count.
+    """
+    try:
+        from jax._src import test_util as jtu
+    except Exception:                                    # pragma: no cover
+        return None
+    for name in ("count_jit_and_pmap_lowerings",
+                 "count_jit_and_pmap_compiles",          # older spelling
+                 "count_jit_tracing_cache_miss"):
+        counter = getattr(jtu, name, None)
+        if counter is not None:
+            return counter
+    return None                                          # pragma: no cover
+
+
+@contextlib.contextmanager
+def no_recompile(allow: int = 0,
+                 label: Optional[str] = None) -> Iterator[RecompileCount]:
+    """Assert that at most ``allow`` new jit lowerings happen in here.
+
+    A *lowering* is jax building a new executable: the warm path of a
+    round loop must trigger none, so any count above ``allow`` means a
+    shape/dtype/static-arg signature silently churned.  Yields a
+    :class:`RecompileCount` whose ``.count`` is readable after the block.
+    """
+    counter = _lowering_counter()
+    if counter is None:                                  # pragma: no cover
+        warnings.warn(
+            "no_recompile(): jax lowering counters unavailable in this "
+            "jax version; contract not enforced", RuntimeWarning,
+            stacklevel=3)
+        yield RecompileCount(None)
+        return
+    with counter() as box:
+        view = RecompileCount(box)
+        yield view
+    n = view.count
+    if n > allow:
+        where = f" [{label}]" if label else ""
+        raise ContractViolation(
+            f"no_recompile{where}: {n} new jit lowering(s) inside a "
+            f"block that allows {allow} — a compilation-cache signature "
+            f"(shape, dtype, static arg, or callable identity) changed "
+            f"on the warm path")
+
+
+# ---------------------------------------------------------------------------
+# assert_donated
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def assert_donated(*trees, label: Optional[str] = None,
+                   strict: Optional[bool] = None) -> Iterator[None]:
+    """Assert every array in ``trees`` was donated inside the block.
+
+    A donated buffer is deleted by the runtime (``arr.is_deleted()``),
+    so any watched leaf still live after the block means the donation
+    silently did not happen — the in-place fast path is quietly running
+    at double memory.  On CPU, where jax documents donation as a no-op,
+    the failure is reported as a :class:`RuntimeWarning` instead unless
+    ``strict=True``.
+    """
+    leaves = [leaf for tree in trees
+              for leaf in jax.tree_util.tree_leaves(tree)]
+    yield
+    live = [leaf for leaf in leaves
+            if hasattr(leaf, "is_deleted") and not leaf.is_deleted()]
+    if not live:
+        return
+    if strict is None:
+        strict = jax.default_backend() != "cpu"
+    where = f" [{label}]" if label else ""
+    msg = (f"assert_donated{where}: {len(live)}/{len(leaves)} watched "
+           f"buffer(s) still live after the block — donation did not "
+           f"happen (backend: {jax.default_backend()})")
+    if strict:
+        raise ContractViolation(msg)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# nan_tripwire
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def nan_tripwire(infs: bool = True) -> Iterator[None]:
+    """Raise at the op that produces a NaN (optionally inf) in here.
+
+    Flips ``jax_debug_nans`` (and ``jax_debug_infs``) for the dynamic
+    extent of the block; previous settings are restored on exit.  Note
+    jax re-runs offending computations un-jitted to localize the bad op,
+    so keep this off hot paths in production runs.
+    """
+    old_nans = jax.config.jax_debug_nans
+    old_infs = jax.config.jax_debug_infs
+    jax.config.update("jax_debug_nans", True)
+    if infs:
+        jax.config.update("jax_debug_infs", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", old_nans)
+        jax.config.update("jax_debug_infs", old_infs)
+
+
+def assert_finite(tree, label: Optional[str] = None) -> None:
+    """Eager check that every leaf of ``tree`` is finite.
+
+    The explicit complement to :func:`nan_tripwire` for values computed
+    *before* entering a guarded block (e.g. params arriving over an ISL
+    merge): one device round-trip, raises :class:`ContractViolation`
+    naming the offending leaf count.
+    """
+    import jax.numpy as jnp
+    bad = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = jnp.asarray(leaf)
+        if arr.dtype.kind == "f" and not bool(jnp.isfinite(arr).all()):
+            bad += 1
+    if bad:
+        where = f" [{label}]" if label else ""
+        raise ContractViolation(
+            f"assert_finite{where}: {bad} leaf array(s) contain "
+            f"NaN/inf")

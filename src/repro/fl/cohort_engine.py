@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts
 from repro.data.pipeline import BucketedCohort, build_bucketed_cohort
 
 from .aggregation import fedavg_stacked_multi
@@ -77,7 +78,8 @@ class CohortEngine:
     """
 
     def __init__(self, apply_fn: Callable, batch_align: int = 32,
-                 client_align: int = 4, donate: Optional[bool] = None):
+                 client_align: int = 4, donate: Optional[bool] = None,
+                 guard: bool = False):
         self.apply_fn = apply_fn
         self.batch_align = max(1, int(batch_align))
         self.client_align = max(1, int(client_align))
@@ -85,7 +87,12 @@ class CohortEngine:
         # default it off there and on everywhere else
         self.donate = (jax.default_backend() != "cpu"
                        if donate is None else bool(donate))
+        # with guard=True, any round whose full bucket layout has been
+        # executed before runs under contracts.no_recompile(): a lowering
+        # on a warm signature raises instead of silently re-tracing
+        self.guard = bool(guard)
         self.signatures: set = set()
+        self.round_signatures: set = set()
         self.stats = CohortEngineStats()
 
     # -- cohort construction ------------------------------------------------
@@ -100,10 +107,18 @@ class CohortEngine:
                                      client_align=self.client_align)
 
     # -- execution ----------------------------------------------------------
+    def _round_signature(self, cohort: BucketedCohort) -> tuple:
+        """Everything jax's jit caches key on for one round of this
+        engine: the per-bucket shapes/dtypes (local-update dispatches)
+        plus the donate flag (selects the fused vs. split program)."""
+        return (tuple(cb.xs.shape + (str(cb.xs.dtype),)
+                      for cb in cohort.buckets), self.donate)
+
     def _record(self, cohort: BucketedCohort):
         for cb in cohort.buckets:
             sig = cb.xs.shape + (str(cb.xs.dtype),)
             self.signatures.add(sig)
+        self.round_signatures.add(self._round_signature(cohort))
         st = self.stats
         st.rounds += 1
         st.bucket_dispatches += len(cohort.buckets)
@@ -119,8 +134,22 @@ class CohortEngine:
         clients' mean local losses in canonical cohort order.  With
         ``self.donate`` the params argument is consumed (see module
         docstring).
+
+        With ``self.guard``, a round whose layout signature is already
+        warm runs under :func:`repro.analysis.contracts.no_recompile`;
+        a recompile there raises ``ContractViolation`` instead of
+        silently burning compile time every round.
         """
+        warm = self.guard and (self._round_signature(cohort)
+                               in self.round_signatures)
         self._record(cohort)
+        if warm:
+            with contracts.no_recompile(label="CohortEngine.round"):
+                return self._execute(params, cohort, lr, total)
+        return self._execute(params, cohort, lr, total)
+
+    def _execute(self, params, cohort: BucketedCohort, lr: float,
+                 total: int) -> Tuple[object, List[float]]:
         lr = jnp.float32(lr)
         # eq.-(13) weights over the concatenated client axis, bucket
         # order; padding clients hold size 0 and therefore weight 0

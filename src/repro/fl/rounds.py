@@ -101,6 +101,10 @@ class FLConfig:
     cohort_batch_align: int = 32   # batched mode: bucket-width grid unit
     cohort_bucketing: str = "geometric"  # geometric|global (module docstring)
     cohort_client_align: int = 4   # batched mode: bucket client-count grid
+    # batched mode: arm contracts.no_recompile() around every round whose
+    # bucket layout is already warm — a recompile on a seen signature
+    # raises ContractViolation instead of silently re-tracing each round
+    guard_recompiles: bool = False
     # Cross-region federation override for SAGINEngine FL mode: a
     # FederationConfig replaces the scenario's wholesale; a bare policy
     # name (e.g. "soft_async") keeps the scenario's cadence/topology/
@@ -279,7 +283,8 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
     if engine is None:
         from .cohort_engine import CohortEngine
         engine = CohortEngine(apply_fn, batch_align=cfg.cohort_batch_align,
-                              client_align=cfg.cohort_client_align)
+                              client_align=cfg.cohort_client_align,
+                              guard=cfg.guard_recompiles)
     cohort = engine.build(ds.x_train, ds.y_train, node_pools, cfg.h_local,
                           rng, max_batch=cfg.batch_cap)
     if cohort is None:
@@ -364,7 +369,8 @@ class RegionTrainer:
             from .cohort_engine import CohortEngine
             self.cohort_engine = CohortEngine(
                 self.apply_fn, batch_align=cfg.cohort_batch_align,
-                client_align=cfg.cohort_client_align)
+                client_align=cfg.cohort_client_align,
+                guard=cfg.guard_recompiles)
 
         self.result = FLResult(cfg, [], [], [], [], [], [])
         eval_idx = self.rng.choice(len(self.ds.x_test),

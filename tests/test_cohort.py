@@ -302,12 +302,10 @@ def test_heavy_skew_padding_ratio_bounded():
 def test_zero_recompiles_after_warmup():
     """Pool drift inside the geometric grid must not trigger recompiles:
     after a warm-up round per signature set, further rounds hit jax's
-    jit cache exclusively."""
-    jtu = pytest.importorskip(
-        "jax._src.test_util",
-        reason="private jax test_util moved; recompile counter unavailable")
-    if not hasattr(jtu, "count_jit_and_pmap_lowerings"):
-        pytest.skip("count_jit_and_pmap_lowerings gone from jax test_util")
+    jit cache exclusively.  Enforced through the shared
+    ``analysis.contracts.no_recompile`` contract (the same guard
+    ``CohortEngine(guard=True)`` arms per warm round)."""
+    from repro.analysis import contracts
 
     x, y = _toy_data(n=4000, seed=5)
     h, lr = 3, 0.05
@@ -332,14 +330,41 @@ def test_zero_recompiles_after_warmup():
     jax.block_until_ready(jax.tree_util.tree_leaves(params))
     sigs_after_warmup = set(engine.signatures)
 
-    with jtu.count_jit_and_pmap_lowerings() as count:
+    with contracts.no_recompile(label="cohort warm rounds") as rc:
         for r in range(3, 8):
             cohort = engine.build(x, y, pools_for(r, rng), h,
                                   np.random.default_rng(r), max_batch=8)
             params, _ = engine.round(params, cohort, lr, total)
         jax.block_until_ready(jax.tree_util.tree_leaves(params))
-    assert count[0] == 0, f"{count[0]} recompiles after warm-up"
+    if not rc.enforced:
+        pytest.skip("jax lowering counters unavailable in this jax")
+    assert rc.count == 0
     assert set(engine.signatures) == sigs_after_warmup
+
+
+def test_guarded_engine_self_arms_on_warm_signatures():
+    """``CohortEngine(guard=True)`` must (a) stay silent across warm
+    rounds on a stable layout and (b) actually raise when the warm path
+    recompiles — seeded here by evicting jax's jit cache between two
+    rounds of the same signature."""
+    from repro.analysis import contracts
+
+    x, y = _toy_data(n=2000, seed=7)
+    params = _mlp_init(jax.random.PRNGKey(3))
+    engine = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                          guard=True)
+    pools = [np.arange(k * 60, (k + 1) * 60) for k in range(5)]
+    for r in range(4):      # round 1 cold (unguarded), 2-4 guarded warm
+        cohort = engine.build(x, y, pools, 3, np.random.default_rng(r),
+                              max_batch=8)
+        params, _ = engine.round(params, cohort, 0.05, 300)
+    assert len(engine.round_signatures) == 1
+
+    jax.clear_caches()      # forces a recompile on the next warm round
+    cohort = engine.build(x, y, pools, 3, np.random.default_rng(9),
+                          max_batch=8)
+    with pytest.raises(contracts.ContractViolation):
+        engine.round(params, cohort, 0.05, 300)
 
 
 def test_fedavg_stacked_multi_matches_single_stack():

@@ -1,0 +1,117 @@
+"""Runtime-contract layer: no_recompile, assert_donated, nan_tripwire,
+assert_finite — positive (violation raises) and negative (clean passes)
+for each."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contracts
+
+
+@pytest.fixture(scope="module")
+def doubler():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))          # warm one shape
+    return f
+
+
+# ---------------------------------------------------------------------------
+# no_recompile
+# ---------------------------------------------------------------------------
+def test_no_recompile_clean(doubler):
+    with contracts.no_recompile() as rc:
+        doubler(jnp.ones(3))
+        doubler(jnp.ones(3))
+    if not rc.enforced:
+        pytest.skip("jax lowering counters unavailable")
+    assert rc.count == 0
+
+
+def test_no_recompile_violation_names_label(doubler):
+    with contracts.no_recompile() as probe:
+        pass
+    if not probe.enforced:
+        pytest.skip("jax lowering counters unavailable")
+    with pytest.raises(contracts.ContractViolation, match="warm path"):
+        with contracts.no_recompile(label="warm path"):
+            doubler(jnp.ones(17))          # fresh shape -> lowering
+
+
+def test_no_recompile_allow_budget(doubler):
+    with contracts.no_recompile() as probe:
+        pass
+    if not probe.enforced:
+        pytest.skip("jax lowering counters unavailable")
+    # one fresh compile emits a small bounded number of lowering events
+    with contracts.no_recompile(allow=8) as rc:
+        doubler(jnp.ones(23))
+    assert 0 < rc.count <= 8
+
+
+def test_contract_violation_is_assertion_error():
+    assert issubclass(contracts.ContractViolation, AssertionError)
+
+
+# ---------------------------------------------------------------------------
+# assert_donated
+# ---------------------------------------------------------------------------
+def test_assert_donated_pass():
+    g = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+    x = jnp.ones(4)
+    with contracts.assert_donated(x, strict=True):
+        g(x)
+    assert x.is_deleted()
+
+
+def test_assert_donated_strict_raises_when_not_donated():
+    x = jnp.ones(4)
+    with pytest.raises(contracts.ContractViolation, match="still live"):
+        with contracts.assert_donated(x, strict=True):
+            y = x + 1          # plain op: no donation  # noqa: F841
+
+
+def test_assert_donated_cpu_default_downgrades_to_warning():
+    if jax.default_backend() != "cpu":
+        pytest.skip("CPU-specific downgrade behavior")
+    x = jnp.ones(4)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with contracts.assert_donated(x):
+            pass
+    assert len(w) == 1 and issubclass(w[0].category, RuntimeWarning)
+
+
+def test_assert_donated_watches_pytrees():
+    g = jax.jit(lambda t: t, donate_argnums=(0,))
+    tree = {"w": jnp.ones(3), "b": jnp.zeros(2)}
+    with contracts.assert_donated(tree, strict=True):
+        g(tree)
+
+
+# ---------------------------------------------------------------------------
+# nan_tripwire / assert_finite
+# ---------------------------------------------------------------------------
+def test_nan_tripwire_raises_and_restores():
+    before = (jax.config.jax_debug_nans, jax.config.jax_debug_infs)
+    with pytest.raises(FloatingPointError):
+        with contracts.nan_tripwire():
+            jnp.log(jnp.zeros(2) - 1.0)
+    after = (jax.config.jax_debug_nans, jax.config.jax_debug_infs)
+    assert before == after
+
+
+def test_nan_tripwire_clean_block():
+    with contracts.nan_tripwire():
+        out = jnp.log(jnp.ones(2))
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_assert_finite():
+    contracts.assert_finite({"w": jnp.ones(3)})
+    with pytest.raises(contracts.ContractViolation, match="NaN/inf"):
+        contracts.assert_finite({"w": jnp.array([1.0, float("nan")])},
+                                label="merge input")
+    # integer leaves are ignored (no float finiteness to check)
+    contracts.assert_finite({"counts": jnp.arange(4)})
