@@ -220,7 +220,7 @@ def bench_cohort(c, payload="logreg", regime="skewed", h=5, batch_cap=8,
     # the timed global path pads clients to n_devices + n_air + 1 = c + 1
     ratios = _padding_ratios(schedule, h, batch_cap, max(8, batch_cap),
                              c + 1)
-    return t_buck, t_glob, t_seq, ratios
+    return t_buck, t_glob, t_seq, ratios, guarded.stats
 
 
 def _steady(times):
@@ -260,7 +260,7 @@ def main() -> int:
     for regime in regimes:
         for c in cohorts:
             seq = c <= args.skip_seq_above
-            t_buck, t_glob, t_seq, (r_buck, r_glob) = bench_cohort(
+            t_buck, t_glob, t_seq, (r_buck, r_glob), stats = bench_cohort(
                 c, payload=args.payload, regime=regime, h=args.h_local,
                 batch_cap=args.batch_cap, rounds=rounds, seq=seq)
             buck_s, glob_s = _steady(t_buck), _steady(t_glob)
@@ -274,8 +274,16 @@ def main() -> int:
                 line += f"  seq {seq_s:7.3f}s ({seq_s / buck_s:4.1f}x)"
                 derived += f";speedup_vs_seq={seq_s / buck_s:.2f}x"
             print(line, flush=True)
+            # the bucketed engine's cumulative stats ride along as row
+            # metrics (same names as the repro.obs cohort.* counters)
             row(f"cohort.{regime}.C{c}.{args.payload}.bucketed_round",
-                buck_s * 1e6, derived)
+                buck_s * 1e6, derived,
+                metrics={"cohort.bucket_dispatches":
+                         stats.bucket_dispatches,
+                         "cohort.recompiled_signatures":
+                         stats.compiled_signatures,
+                         "cohort.padding_ratio":
+                         round(stats.padding_ratio, 4)})
             row(f"cohort.{regime}.C{c}.{args.payload}.global_round",
                 glob_s * 1e6, f"pad_global={r_glob:.2f}")
             if regime == "skewed" and c >= 64:   # engine scale (docstring)

@@ -57,9 +57,17 @@ def timeit_min(fn: Callable, n: int = 5, warmup: int = 1) -> float:
     return best * 1e6
 
 
-def row(name: str, us: float, derived: str = ""):
-    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
-                 "derived": derived})
+def row(name: str, us: float, derived: str = "",
+        metrics: Dict[str, object] | None = None):
+    """Record one benchmark row.  ``metrics`` (optional) is a flat
+    JSON-serializable dict — typically a ``repro.obs`` metrics snapshot
+    or engine-stats excerpt — attached to the BENCH_*.json artifact row
+    (the CSV line stays the name,us,derived triple)."""
+    r: Dict[str, object] = {"name": name, "us_per_call": round(float(us), 1),
+                            "derived": derived}
+    if metrics:
+        r["metrics"] = metrics
+    ROWS.append(r)
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

@@ -1,0 +1,173 @@
+"""Observability overhead gate: the disabled tracer must be free.
+
+``repro.obs`` instrumentation sites in the cohort round path guard on
+``tracer.enabled`` (one attribute load + branch each).  This benchmark
+prices that guard and GATES it: the disabled-tracer round must stay
+within :data:`GATE_PCT` (2%) of a bare reference round, measured on the
+same cohort-engine workload ``benchmarks.cohort_scaling`` times.
+
+Three arms, identical synthetic workload (logreg payload, drifting
+ragged pools), best-of-n steady-state timing (``timeit_min`` — noise
+only ever adds time):
+
+* ``bare`` — the round body with the obs blocks bypassed
+  (``_record`` + ``_execute`` called directly): the pre-instrumentation
+  reference.  The residual per-dispatch ``if trace:`` guards inside
+  ``_execute`` ride along in BOTH arms, so the gated delta isolates
+  exactly the code the instrumentation added to ``round()``.
+* ``off``  — ``CohortEngine.round()`` with the shared ``NULL_TRACER``
+  (the default for every untraced run).  **Gated: off/bare − 1 < 2%.**
+* ``on``   — ``round()`` with an enabled in-memory tracer (spans +
+  metrics, no file I/O).  Informational: the price of turning tracing
+  on, reported but not gated.
+
+Exit status 1 when the gate fails (``benchmarks.run`` then drops the
+rows from the perf artifacts and fails the lane).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.obs_overhead
+  PYTHONPATH=src python -m benchmarks.obs_overhead --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.cohort_engine import CohortEngine
+from repro.obs import ObsConfig, Tracer
+
+from .common import row, timeit_min
+
+GATE_PCT = 2.0
+
+
+def _logreg(key, din=64, nc=10):
+    params = {"w": jax.random.normal(key, (din, nc)) * 0.05,
+              "b": jnp.zeros(nc)}
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"] + p["b"]
+
+    return params, apply_fn
+
+
+def _pools(n_samples, c, h, rng):
+    sizes = np.maximum(h, rng.lognormal(3.0, 0.8, c).astype(int))
+    sizes = np.minimum(sizes, max(h, n_samples // max(1, c)))
+    perm = rng.permutation(n_samples)
+    pools, pos = [], 0
+    for s in sizes:
+        pools.append(perm[pos:pos + s].copy())
+        pos += s
+    return pools
+
+
+def _cohorts(engine, c, h, rounds, seed):
+    """Pre-built bucketed cohorts for ``rounds`` drifting pools, so the
+    timed region is the round execution only (no host-side planning)."""
+    rng = np.random.default_rng(seed)
+    din = 64
+    n = max(4096, c * 48)
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    ds = SimpleNamespace(x_train=x, y_train=y)
+    out = []
+    for _ in range(rounds):
+        pools = _pools(n, c, h, rng)
+        cohort = engine.build(ds.x_train, ds.y_train, pools, h, rng,
+                              max_batch=8)
+        out.append((cohort, sum(len(p) for p in pools)))
+    return out
+
+
+def bench_overhead(c=32, h=5, rounds=4, reps=20, seed=0):
+    """Best-of-``reps`` seconds for one pass over ``rounds`` cohorts,
+    per arm.  Returns ``(t_bare, t_off, t_on, tracer)``."""
+    params, apply_fn = _logreg(jax.random.PRNGKey(seed))
+
+    def make_engine(tracer=None):
+        # donate=False: the timed loop reuses the same params buffer
+        return CohortEngine(apply_fn, batch_align=8, client_align=4,
+                            donate=False, tracer=tracer)
+
+    eng_bare = make_engine()
+    eng_off = make_engine()
+    tracer = Tracer(ObsConfig(path=None))     # in-memory spans + metrics
+    eng_on = make_engine(tracer=tracer)
+    work = _cohorts(eng_bare, c, h, rounds, seed)
+
+    def run_bare():
+        for cohort, total in work:
+            eng_bare._record(cohort)
+            p, _ = eng_bare._execute(params, cohort, 0.05, total)
+        jax.block_until_ready(p)
+
+    def run_off():
+        for cohort, total in work:
+            p, _ = eng_off.round(params, cohort, 0.05, total)
+        jax.block_until_ready(p)
+
+    def run_on():
+        for cohort, total in work:
+            p, _ = eng_on.round(params, cohort, 0.05, total)
+        jax.block_until_ready(p)
+
+    # warmup=2: first pass compiles every bucket signature
+    t_bare = timeit_min(run_bare, n=reps, warmup=2) / 1e6
+    t_off = timeit_min(run_off, n=reps, warmup=2) / 1e6
+    t_on = timeit_min(run_on, n=reps, warmup=2) / 1e6
+    return t_bare, t_off, t_on, tracer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    smoke_env = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    ap.add_argument("--cohorts", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true", default=smoke_env,
+                    help="tiny sizes for CI")
+    args, _ = ap.parse_known_args()
+
+    c = args.cohorts or (16 if args.smoke else 32)
+    rounds = args.rounds or (3 if args.smoke else 4)
+    reps = args.reps or (8 if args.smoke else 20)
+
+    print(f"# obs_overhead C={c} rounds={rounds} reps={reps} "
+          f"gate=<{GATE_PCT:.0f}% smoke={args.smoke}")
+    t_bare, t_off, t_on, tracer = bench_overhead(c=c, rounds=rounds,
+                                                 reps=reps)
+    off_pct = 100.0 * (t_off / t_bare - 1.0)
+    on_pct = 100.0 * (t_on / t_bare - 1.0)
+    print(f"bare {t_bare * 1e3:8.3f}ms  off {t_off * 1e3:8.3f}ms "
+          f"({off_pct:+.2f}%)  on {t_on * 1e3:8.3f}ms ({on_pct:+.2f}%)",
+          flush=True)
+
+    snap = tracer.metrics.snapshot(prefix="cohort.")
+    row("obs.overhead.bare_pass", t_bare * 1e6)
+    row("obs.overhead.disabled_pass", t_off * 1e6,
+        f"overhead_vs_bare={off_pct:+.2f}%;gate=<{GATE_PCT:.0f}%")
+    row("obs.overhead.enabled_pass", t_on * 1e6,
+        f"overhead_vs_bare={on_pct:+.2f}%;spans={len(tracer.spans)}",
+        metrics={"cohort.bucket_dispatches":
+                 snap.get("cohort.bucket_dispatches", 0),
+                 "cohort.recompiled_signatures":
+                 snap.get("cohort.recompiled_signatures", 0)})
+
+    if off_pct >= GATE_PCT:
+        # return instead of sys.exit: benchmarks.run must survive one
+        # module's failure and keep printing the remaining rows
+        print(f"obs_overhead: disabled-path overhead {off_pct:+.2f}% "
+              f"breaches the {GATE_PCT:.0f}% gate", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,8 +7,10 @@ Artifact mode (``--json``) additionally writes machine-readable perf
 baselines so every PR's numbers are comparable against the previous
 ones:
 
-* ``BENCH_cohort.json`` — rows from ``cohort_scaling`` (and
-  ``fl_payload_scaling`` when it ran): the FL round-engine trajectory.
+* ``BENCH_cohort.json`` — rows from ``cohort_scaling``,
+  ``obs_overhead`` (the <2% disabled-tracing gate; rows carry
+  ``repro.obs`` metrics snapshots) and ``fl_payload_scaling`` when it
+  ran: the FL round-engine trajectory.
 * ``BENCH_sim.json``    — rows from ``sim_scale`` (and
   ``handover_dynamics`` when it ran): the propagation/engine trajectory.
 * ``BENCH_federation.json`` — rows from ``cross_region``: the
@@ -37,11 +39,13 @@ from .common import drain_rows, write_bench_json
 ARTIFACT_OF = {
     "cohort_scaling": "BENCH_cohort.json",
     "fl_payload_scaling": "BENCH_cohort.json",
+    "obs_overhead": "BENCH_cohort.json",
     "sim_scale": "BENCH_sim.json",
     "handover_dynamics": "BENCH_sim.json",
     "cross_region": "BENCH_federation.json",
 }
-SMOKE_MODULES = ("sim_scale", "cohort_scaling", "cross_region")
+SMOKE_MODULES = ("sim_scale", "cohort_scaling", "cross_region",
+                 "obs_overhead")
 
 
 def _modules():
@@ -49,11 +53,12 @@ def _modules():
                    cross_region, fig4_time_to_accuracy,
                    fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
                    fl_payload_scaling, handover_dynamics, kernels_micro,
-                   roofline_report, sim_scale)
+                   obs_overhead, roofline_report, sim_scale)
     return [
         ("sim_scale", sim_scale),
         ("cross_region", cross_region),
         ("cohort_scaling", cohort_scaling),
+        ("obs_overhead", obs_overhead),
         ("fig5_compute_ablation", fig5_compute_ablation),
         ("handover_dynamics", handover_dynamics),
         ("fl_payload_scaling", fl_payload_scaling),

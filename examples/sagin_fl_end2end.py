@@ -37,6 +37,14 @@ Example:
     PYTHONPATH=src python examples/sagin_fl_end2end.py \
         --scenario multi_region --global-model --rounds 20 \
         --policy soft_async
+
+Observability
+-------------
+``--trace PATH`` records the run with ``repro.obs``: a ``repro-trace/1``
+JSONL file plus a Perfetto sibling (``PATH`` with ``.perfetto.json``)
+that renders one timeline track per region in https://ui.perfetto.dev.
+Summarize with ``python -m repro.obs report PATH``.  Pair with
+``--execution batched`` to also capture per-bucket dispatch spans.
 """
 import argparse
 import dataclasses
@@ -83,6 +91,14 @@ def main():
                          "synchronous | soft_async | partial | elected_hub "
                          "(default: the scenario's; see "
                          "repro.fl.federation)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs trace (JSONL + Perfetto "
+                         "sibling) of the run to PATH; inspect with "
+                         "`python -m repro.obs report PATH`")
+    ap.add_argument("--execution", default="auto",
+                    choices=["auto", "batched", "sequential"],
+                    help="round execution mode (FLConfig.execution); "
+                         "batched emits bucket_dispatch trace spans")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -96,7 +112,8 @@ def main():
                   n_air=args.air, train_fraction=args.fraction,
                   h_local=3, eval_size=1024,
                   use_constellation=args.constellation,
-                  scenario=args.scenario)
+                  scenario=args.scenario, execution=args.execution,
+                  obs=args.trace)
 
     if args.scenario and args.global_model:
         import math
@@ -142,6 +159,13 @@ def main():
 
     for strategy in ("adaptive", "none"):
         cfg = FLConfig(strategy=strategy, **common)
+        if args.trace:
+            # one trace per compared run (the flush is a full rewrite,
+            # so sharing a path would keep only the last strategy)
+            stem, dot, ext = args.trace.rpartition(".")
+            per = (f"{stem}.{strategy}.{ext}" if dot
+                   else f"{args.trace}.{strategy}")
+            cfg = dataclasses.replace(cfg, obs=per)
         res = run_fl(cfg)
         summarize(strategy, res, args.rounds)
         if strategy == "adaptive":

@@ -25,6 +25,9 @@ DON001    error     read of a buffer after it was passed in a
 HOST001   warning   ``.item()`` / ``float()`` / ``np.asarray()`` on a
                     non-trivial value inside a round/step loop (hidden
                     device->host sync every iteration)
+OBS001    error     ``repro.obs`` Tracer/Metrics call inside a
+                    jit-decorated (or module-level-jitted) function —
+                    runs at trace time, not per execution
 ========  ========  ==================================================
 
 All rules resolve import aliases (``import numpy as np``, ``from jax
@@ -841,3 +844,89 @@ def check_host001(ctx: FileContext):
                        f"{msg}: forces a device->host transfer and blocks "
                        f"dispatch every iteration — accumulate on device "
                        f"and read out after the loop")
+
+
+# ---------------------------------------------------------------------------
+# OBS001 — tracer/metrics call inside a jitted function
+# ---------------------------------------------------------------------------
+_OBS_METHODS = {"span", "event", "set_context", "flush", "counter", "gauge",
+                "histogram", "inc", "set", "observe", "wall_now"}
+_OBS_RECEIVERS = ("tracer", "metrics")
+
+
+def _is_obs_call(node: ast.Call, imports) -> bool:
+    """A call into ``repro.obs`` (resolved import) or a method call whose
+    receiver chain names a tracer/metrics object (``tracer.span(...)``,
+    ``self.tracer.event(...)``, ``m.counter("x").inc()``)."""
+    origin = _resolve_call(node, imports)
+    if origin is not None and (origin.startswith("repro.obs.")
+                               or origin == "repro.obs"):
+        return True
+    f = node.func
+    if not (isinstance(f, ast.Attribute) and f.attr in _OBS_METHODS):
+        return False
+    for sub in ast.walk(f.value):
+        ident = None
+        if isinstance(sub, ast.Name):
+            ident = sub.id
+        elif isinstance(sub, ast.Attribute):
+            ident = sub.attr
+        if ident is not None:
+            low = ident.lower()
+            if any(low == r or low.endswith("_" + r) or low == "_" + r
+                   for r in _OBS_RECEIVERS):
+                return True
+    return False
+
+
+def _jitted_function_defs(tree: ast.Module, imports):
+    """Function defs whose body runs under tracing: jit-decorated defs,
+    plus defs bound by module-level ``F = jax.jit(g)``."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    seen: Set[int] = set()
+    for node in defs.values():
+        for deco in node.decorator_list:
+            jitted = (_is_jit_name(resolve(deco, imports))
+                      or (isinstance(deco, ast.Call)
+                          and _jit_callable_of(deco, imports) is not None))
+            if jitted and id(node) not in seen:
+                seen.add(id(node))
+                yield node
+    for stmt in tree.body:
+        if (isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call)
+                and _jit_callable_of(stmt.value, imports) is not None):
+            args = stmt.value.args
+            # jax.jit(g, ...) and partial(jax.jit, ...)(g) both put the
+            # traced callable in the first positional argument
+            target = args[0] if args else None
+            if (_resolve_call(stmt.value, imports) == "functools.partial"
+                    and len(args) >= 2):
+                target = args[1]
+            if (isinstance(target, ast.Name) and target.id in defs
+                    and id(defs[target.id]) not in seen):
+                seen.add(id(defs[target.id]))
+                yield defs[target.id]
+
+
+@register("OBS001", "obs-call-in-jit", ERROR, (LIBRARY, BENCH),
+          "repro.obs Tracer/Metrics call inside a jitted function")
+def check_obs001(ctx: FileContext):
+    for fn in _jitted_function_defs(ctx.tree, ctx.imports):
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and _is_obs_call(node, ctx.imports)):
+                continue
+            # chained instrument calls (metrics.counter("x").inc()) match
+            # twice; report only the innermost of the chain
+            if (isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Call)
+                    and _is_obs_call(node.func.value, ctx.imports)):
+                continue
+            yield (node,
+                       f"tracer/metrics call inside jitted '{fn.name}': "
+                       f"the Python call runs once at TRACE time (and "
+                       f"again per retrace), not per execution — spans/"
+                       f"metrics recorded here are wrong and a host "
+                       f"callback would break async dispatch; hoist the "
+                       f"instrumentation outside the compiled function")

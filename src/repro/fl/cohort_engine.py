@@ -38,6 +38,7 @@ copy for exactly this reason).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -79,8 +80,12 @@ class CohortEngine:
 
     def __init__(self, apply_fn: Callable, batch_align: int = 32,
                  client_align: int = 4, donate: Optional[bool] = None,
-                 guard: bool = False):
+                 guard: bool = False, tracer=None):
+        from repro.obs import NULL_TRACER
         self.apply_fn = apply_fn
+        # repro.obs tracer (RegionTrainer shares its own); the disabled
+        # default costs one branch per round + one per bucket dispatch
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.batch_align = max(1, int(batch_align))
         self.client_align = max(1, int(client_align))
         # buffer donation is unsupported on CPU (jax warns and ignores);
@@ -140,17 +145,54 @@ class CohortEngine:
         a recompile there raises ``ContractViolation`` instead of
         silently burning compile time every round.
         """
+        tr = self.tracer
+        if tr.enabled:
+            # recompiles = bucket shapes not yet in the signature cache
+            # (the PR-6 no_recompile contract's counter, as a metric)
+            fresh = sum(1 for cb in cohort.buckets
+                        if cb.xs.shape + (str(cb.xs.dtype),)
+                        not in self.signatures)
+            m = tr.metrics
+            m.counter("cohort.recompiled_signatures").inc(fresh)
+            m.counter("cohort.bucket_dispatches").inc(len(cohort.buckets))
+            m.counter("cohort.real_elements").inc(cohort.real_elements)
+            m.counter("cohort.layout_elements").inc(cohort.layout_elements)
         warm = self.guard and (self._round_signature(cohort)
                                in self.round_signatures)
         self._record(cohort)
+        if tr.enabled:
+            tr.metrics.gauge("cohort.padding_ratio").set(
+                self.stats.padding_ratio)
         if warm:
             with contracts.no_recompile(label="CohortEngine.round"):
                 return self._execute(params, cohort, lr, total)
         return self._execute(params, cohort, lr, total)
 
+    def _trace_dispatch(self, cb, result, t0: float):
+        """Emit one ``bucket_dispatch`` span (enabled tracer only).
+
+        ``dur_wall`` is host dispatch time; with
+        ``ObsConfig.device_timing`` the result is fenced with
+        ``jax.block_until_ready`` first, so it is true device time
+        (changes performance, never values — the fence only forces the
+        synchronization that would happen later anyway).
+        """
+        tr = self.tracer
+        if tr.device_timing:
+            jax.block_until_ready(result)
+        c, h, b = cb.xs.shape[0], cb.xs.shape[1], cb.xs.shape[2]
+        tr.span("bucket_dispatch", f"C{c}xH{h}xB{b}",
+                dur_wall=time.perf_counter() - t0,
+                clients=c, batch_width=b,
+                real=int(np.count_nonzero(cb.mask)),
+                layout=int(cb.mask.size))
+        tr.metrics.histogram("cohort.dispatch_wall_s").observe(
+            time.perf_counter() - t0)
+
     def _execute(self, params, cohort: BucketedCohort, lr: float,
                  total: int) -> Tuple[object, List[float]]:
         lr = jnp.float32(lr)
+        trace = self.tracer.enabled
         # eq.-(13) weights over the concatenated client axis, bucket
         # order; padding clients hold size 0 and therefore weight 0
         w = np.concatenate([cb.sizes for cb in cohort.buckets])
@@ -163,16 +205,22 @@ class CohortEngine:
             # schedules the two smaller programs better than one fused
             # one, and there is no buffer to reuse anyway.
             cb = cohort.buckets[0]
+            t0 = time.perf_counter() if trace else 0.0
             new_params, losses = cohort_round_step_donated(
                 self.apply_fn, params, jnp.asarray(cb.xs),
                 jnp.asarray(cb.ys), jnp.asarray(cb.mask), weights, lr)
+            if trace:
+                self._trace_dispatch(cb, (new_params, losses), t0)
             loss_parts = [losses]
         else:
             stacked_parts, loss_parts = [], []
             for cb in cohort.buckets:
+                t0 = time.perf_counter() if trace else 0.0
                 stacked, losses = cohort_local_update(
                     self.apply_fn, params, jnp.asarray(cb.xs),
                     jnp.asarray(cb.ys), jnp.asarray(cb.mask), lr)
+                if trace:
+                    self._trace_dispatch(cb, (stacked, losses), t0)
                 stacked_parts.append(stacked)
                 loss_parts.append(losses)
             new_params = fedavg_stacked_multi(stacked_parts, weights,

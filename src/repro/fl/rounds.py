@@ -75,6 +75,7 @@ from .federation import FederationConfig, RegionFedState
 
 if TYPE_CHECKING:  # pragma: no cover - circular-import guard
     from repro.core.constellation import AccessInterval
+    from repro.obs import ObsConfig, Tracer
     from repro.scenarios.registry import Scenario
 
 
@@ -111,6 +112,11 @@ class FLConfig:
     # half-life and swaps only the policy; None defers to the scenario.
     # Ignored by single-region run_fl (nothing to merge with).
     federation: Optional["FederationConfig | str"] = None
+    # Observability (repro.obs): an ObsConfig, a bare JSONL output path
+    # string, or None (disabled — the default, a no-op null tracer).
+    # Wins over Scenario.obs when both are set.  The tracer only
+    # observes: trajectories are bit-identical with obs on or off.
+    obs: Optional["ObsConfig | str"] = None
 
     def resolved_execution(self) -> str:
         if self.execution == "auto":
@@ -310,11 +316,21 @@ class RegionTrainer:
 
     def __init__(self, cfg: FLConfig,
                  scenario: Optional["Scenario"] = None,
-                 intervals: Optional[Sequence["AccessInterval"]] = None):
+                 intervals: Optional[Sequence["AccessInterval"]] = None,
+                 tracer: Optional["Tracer"] = None):
+        from repro.obs import resolve_obs
         self.cfg = cfg
         scn = scenario
         if scn is None and cfg.scenario is not None:
             scn = _resolve_scenario(cfg)
+        # an explicit tracer (the engine's shared one) wins over the
+        # config; scenario-level obs applies when the config is silent
+        if tracer is None:
+            obs = cfg.obs
+            if obs is None and scn is not None:
+                obs = scn.obs
+            tracer = resolve_obs(obs)
+        self.tracer = tracer
         if scn is not None:
             from repro.sim.engine import region_seed
             rseed = region_seed(cfg.seed, cfg.region_index)
@@ -351,6 +367,13 @@ class RegionTrainer:
 
         self.orch = _build_orchestrator(cfg, self.sagin, scenario=scn,
                                         intervals=intervals)
+        self._region_name = (self.region.name if self.region is not None
+                             else f"region{cfg.region_index}")
+        # dynamics emits `outage` events against the tracer's round
+        # context (set below in step()) instead of plumbing region
+        # identity through the orchestrator call chain
+        if self.orch.dynamics is not None:
+            self.orch.dynamics.tracer = self.tracer
 
         self.execution = cfg.resolved_execution()
         if self.execution not in ("batched", "sequential"):
@@ -370,7 +393,7 @@ class RegionTrainer:
             self.cohort_engine = CohortEngine(
                 self.apply_fn, batch_align=cfg.cohort_batch_align,
                 client_align=cfg.cohort_client_align,
-                guard=cfg.guard_recompiles)
+                guard=cfg.guard_recompiles, tracer=self.tracer)
 
         self.result = FLResult(cfg, [], [], [], [], [], [])
         eval_idx = self.rng.choice(len(self.ds.x_test),
@@ -427,6 +450,12 @@ class RegionTrainer:
         :class:`~repro.core.scheduler.RoundRecord` and appends the
         training metrics to :attr:`result`."""
         cfg = self.cfg
+        tr = self.tracer
+        if tr.enabled:
+            # context BEFORE orch.step: dynamics samples (and emits
+            # `outage` events) inside it, at this round's start clock
+            tr.set_context(region=self._region_name, round=r,
+                           t_sim=self.orch.wall_clock)
         rec = self.orch.step(r)
         _apply_plan_to_pools(rec.plan, self.pools, self.sagin)
         _sync_sizes(self.pools, self.sagin)
@@ -460,14 +489,74 @@ class RegionTrainer:
         res.layer_portions.append({
             "ground": n_ground / total, "air": n_air / total,
             "space": len(self.pools.sat) / total})
+        if tr.enabled:
+            self._emit_round_spans(r, rec, res)
         return rec
 
+    def _emit_round_spans(self, r: int, rec, res: FLResult):
+        """Trace one completed round: offload transfer, handover legs,
+        and the round span itself (``repro.obs``; enabled path only).
+        Purely observational — reads the round record, writes spans."""
+        tr = self.tracer
+        t0 = rec.wall_clock_start
+        plan = rec.plan
+        q_bits = float(self.sagin.q_bits)
+        up = sum(sum(cp.d_ground_air.values()) + cp.d_air_space
+                 for cp in plan.clusters)
+        down = sum(sum(cp.d_air_ground.values()) + cp.d_space_air
+                   for cp in plan.clusters)
+        tr.span("offload", f"offload case{plan.case}", t_sim=t0,
+                case=plan.case, up_samples=up, down_samples=down,
+                bytes_moved=(up + down) * q_bits / 8.0)
+        tr.metrics.counter("offload.bytes").inc((up + down) * q_bits / 8.0)
+        tr.metrics.counter("offload.samples_up").inc(up)
+        tr.metrics.counter("offload.samples_down").inc(down)
 
-def run_fl(cfg: FLConfig) -> FLResult:
-    """Single-region FL job: a :class:`RegionTrainer` stepped to the end."""
-    trainer = RegionTrainer(cfg)
+        sched = rec.schedule
+        prev = None
+        for leg in sched.legs:
+            if prev is not None and leg.handover_delay > 0:
+                tr.span("handover", f"sat{prev}->sat{leg.sat_index}",
+                        t_sim=t0 + leg.start_time - leg.handover_delay,
+                        dur_sim=leg.handover_delay,
+                        samples=leg.samples_processed)
+            prev = leg.sat_index
+        if sched.n_handovers:
+            tr.metrics.counter("handover.count").inc(sched.n_handovers)
+
+        ev = rec.events
+        uplink_delay = (sum(ev.uplink_delays.values())
+                        if ev is not None else 0.0)
+        tr.span("round", f"{self._region_name}/r{r}", t_sim=t0,
+                dur_sim=rec.realized_latency,
+                case=plan.case, latency_analytic=rec.latency,
+                # the no-participant loss sentinel is NaN — not valid
+                # strict JSON, so map it to None in the trace
+                loss=(res.losses[-1] if res.participated[-1] else None),
+                acc=res.accuracies[-1],
+                participated=res.participated[-1],
+                n_handovers=sched.n_handovers, t_space=sched.total_latency,
+                uplink_delay=uplink_delay)
+        tr.metrics.histogram("round.realized_latency_s").observe(
+            rec.realized_latency)
+        tr.metrics.histogram("round.overhead_s").observe(
+            rec.realized_latency - rec.latency)
+
+
+def run_fl(cfg: FLConfig, tracer=None) -> FLResult:
+    """Single-region FL job: a :class:`RegionTrainer` stepped to the end.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) overrides ``cfg.obs`` —
+    ``run_fl_all_regions`` shares one tracer across regions this way;
+    when this function owns the tracer (built from ``cfg.obs``) it also
+    flushes the trace at the end of the run.
+    """
+    own_tracer = tracer is None
+    trainer = RegionTrainer(cfg, tracer=tracer)
     for r in range(cfg.n_rounds):
         trainer.step(r)
+    if own_tracer:
+        trainer.tracer.flush()
     return trainer.result
 
 

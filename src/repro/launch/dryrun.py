@@ -111,7 +111,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(mesh.devices.shape))
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     # batch axes usable for activation constraints (respect divisibility)
     baxes = mesh_batch_axes(multi_pod)
@@ -160,9 +160,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
             inp = input_specs(cfg, shape)["inputs"]
             lowered = step.lower(params_abs, cache_abs, inp,
                                  jax.ShapeDtypeStruct((), np.int32))
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     from repro.compat import cost_analysis
     cost = cost_analysis(compiled)

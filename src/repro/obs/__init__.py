@@ -1,0 +1,32 @@
+"""``repro.obs`` — tracing + metrics for the SAGIN FL stack.
+
+Enable by handing any run an :class:`ObsConfig` (or a bare output-path
+string) through ``FLConfig.obs`` / ``Scenario.obs``:
+
+    fl = FLConfig(..., obs="trace.jsonl")
+    SAGINEngine("multi_region", fl=fl).run(4)
+    # -> trace.jsonl (repro-trace/1) + trace.perfetto.json
+
+then ``python -m repro.obs report trace.jsonl`` for round tables /
+latency breakdown / anomalies, or load the ``.perfetto.json`` sibling
+in https://ui.perfetto.dev for the per-region timeline.
+
+Disabled (the default) costs one branch per instrumentation site —
+gated <2% on the cohort benchmark by ``benchmarks/obs_overhead.py`` —
+and the tracer never perturbs RNG streams or results either way.
+"""
+from .metrics import (Counter, Gauge, Histogram, Metrics,  # noqa: F401
+                      NULL_METRICS)
+from .report import TraceReport, analyze, render  # noqa: F401
+from .tracer import (FEDERATION_TRACK, NULL_TRACER, ObsConfig,  # noqa: F401
+                     SPAN_KINDS, Span, TRACE_SCHEMA, Tracer, load_jsonl,
+                     perfetto_path, resolve_obs, to_perfetto, write_jsonl,
+                     write_perfetto)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics", "NULL_METRICS",
+    "TraceReport", "analyze", "render",
+    "FEDERATION_TRACK", "NULL_TRACER", "ObsConfig", "SPAN_KINDS", "Span",
+    "TRACE_SCHEMA", "Tracer", "load_jsonl", "perfetto_path", "resolve_obs",
+    "to_perfetto", "write_jsonl", "write_perfetto",
+]

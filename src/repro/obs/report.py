@@ -1,0 +1,207 @@
+"""Trace analysis: per-region tables, latency breakdown, anomalies.
+
+Consumes a JSONL trace written by :meth:`repro.obs.Tracer.flush` and
+renders what the paper's latency story needs to be debuggable:
+
+* a per-region round table (rounds, simulated end time, round-latency
+  stats, handover/outage counts, final accuracy);
+* a latency breakdown — where each region's simulated time went:
+  **compute** (round latency minus in-round stalls), **uplink**
+  (dead-air outage delays), **ISL** (handover switches + merge tolls),
+  and **idle** (barrier parking / event-loop gaps to the run's end);
+* top-k anomalies: straggler rounds (≥ :data:`STRAGGLER_FACTOR` × the
+  region's median), repeated-handover rounds (≥2 switches), and
+  quorum-miss or skipped merges.
+
+Everything here is pure span arithmetic — no jax, no simulator
+imports — so the CLI (``python -m repro.obs report``) stays fast and
+usable on traces copied off another machine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .tracer import FEDERATION_TRACK, Span
+
+STRAGGLER_FACTOR = 1.5
+
+
+@dataclasses.dataclass
+class Anomaly:
+    kind: str        # "straggler" | "repeated_handover" | "quorum_miss"
+    severity: float  # sort key, larger = worse
+    message: str
+
+
+@dataclasses.dataclass
+class RegionReport:
+    region: str
+    rounds: int = 0
+    end_sim: float = 0.0           # last activity on this region's track
+    mean_round: float = 0.0
+    max_round: float = 0.0
+    handovers: int = 0
+    outages: int = 0
+    final_acc: Optional[float] = None
+    # latency breakdown (simulated seconds)
+    compute: float = 0.0
+    uplink: float = 0.0
+    isl: float = 0.0
+    idle: float = 0.0
+
+
+@dataclasses.dataclass
+class TraceReport:
+    regions: List[RegionReport]
+    merges: int
+    anomalies: List[Anomaly]
+    n_spans: int
+    kinds: Dict[str, int]
+
+
+def _median(vals: Sequence[float]) -> float:
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
+    """Aggregate a span list into the report structure (pure function)."""
+    kinds: Dict[str, int] = {}
+    for s in spans:
+        kinds[s.kind] = kinds.get(s.kind, 0) + 1
+
+    by_region: Dict[str, List[Span]] = {}
+    merges = [s for s in spans if s.kind == "merge"]
+    for s in spans:
+        if s.region and s.region != FEDERATION_TRACK:
+            by_region.setdefault(s.region, []).append(s)
+
+    anomalies: List[Anomaly] = []
+    regions: List[RegionReport] = []
+    run_end = max((s.t_sim + s.dur_sim for s in spans), default=0.0)
+
+    for name in sorted(by_region):
+        rs = by_region[name]
+        rounds = sorted((s for s in rs if s.kind == "round"),
+                        key=lambda s: s.round)
+        hand = [s for s in rs if s.kind == "handover"]
+        outs = [s for s in rs if s.kind == "outage"]
+        durs = [s.dur_sim for s in rounds]
+        rep = RegionReport(region=name, rounds=len(rounds),
+                           handovers=len(hand), outages=len(outs))
+        rep.end_sim = max((s.t_sim + s.dur_sim for s in rs), default=0.0)
+        if durs:
+            rep.mean_round = sum(durs) / len(durs)
+            rep.max_round = max(durs)
+        accs = [s.attrs.get("acc") for s in rounds
+                if s.attrs.get("acc") is not None]
+        rep.final_acc = accs[-1] if accs else None
+
+        # breakdown: in-round stalls are priced by their own spans;
+        # whatever round time they don't explain is compute.  Merge
+        # tolls addressed to this region (per-recipient isl_costs in the
+        # merge span attrs) are ISL time spent outside any round.
+        uplink = sum(float(s.attrs.get("delay", 0.0)) for s in outs
+                     if s.attrs.get("event") == "uplink")
+        isl_in_round = sum(s.dur_sim for s in hand)
+        merge_toll = 0.0
+        for m in merges:
+            names = m.attrs.get("recipient_names") or []
+            costs = m.attrs.get("isl_costs") or []
+            merge_toll += sum(c for rn, c in zip(names, costs)
+                              if rn == name)
+        busy = sum(durs)
+        rep.uplink = uplink
+        rep.isl = isl_in_round + merge_toll
+        rep.compute = max(0.0, busy - uplink - isl_in_round)
+        rep.idle = max(0.0, run_end - busy - merge_toll)
+        regions.append(rep)
+
+        med = _median(durs)
+        if med > 0:
+            for s in rounds:
+                ratio = s.dur_sim / med
+                if ratio >= STRAGGLER_FACTOR:
+                    anomalies.append(Anomaly(
+                        "straggler", ratio,
+                        f"{name} round {s.round}: {s.dur_sim:.1f}s "
+                        f"({ratio:.1f}x region median {med:.1f}s)"))
+        for s in rounds:
+            nh = int(s.attrs.get("n_handovers", 0))
+            if nh >= 2:
+                anomalies.append(Anomaly(
+                    "repeated_handover", nh,
+                    f"{name} round {s.round}: {nh} satellite handovers "
+                    f"in one round"))
+
+    for m in merges:
+        if m.attrs.get("skipped"):
+            anomalies.append(Anomaly(
+                "quorum_miss", float("inf"),
+                f"merge at boundary r{m.round} SKIPPED "
+                f"({m.attrs.get('policy', '?')}: no plan)"))
+        elif m.attrs.get("quorum_miss"):
+            parts = m.attrs.get("participants") or []
+            anomalies.append(Anomaly(
+                "quorum_miss", float(len(parts)),
+                f"merge at boundary r{m.round} with partial quorum: "
+                f"{len(parts)} participant(s) {list(parts)}"))
+
+    anomalies.sort(key=lambda a: -a.severity)
+    return TraceReport(regions=regions, merges=len(merges),
+                       anomalies=anomalies[:top], n_spans=len(spans),
+                       kinds=kinds)
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    def fmt(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths)).rstrip()
+    lines = [fmt(headers), fmt(["-" * w for w in widths])]
+    lines += [fmt(r) for r in rows]
+    return "\n".join(lines)
+
+
+def render(report: TraceReport) -> str:
+    """Human-readable report text (what the CLI prints)."""
+    out: List[str] = []
+    kinds = " ".join(f"{k}={n}" for k, n in sorted(report.kinds.items()))
+    out.append(f"trace: {report.n_spans} spans "
+               f"({kinds or 'empty'}), {report.merges} merge(s)")
+    out.append("")
+    out.append("per-region rounds")
+    rows = []
+    for r in report.regions:
+        rows.append([r.region, str(r.rounds), f"{r.end_sim:.1f}",
+                     f"{r.mean_round:.1f}", f"{r.max_round:.1f}",
+                     str(r.handovers), str(r.outages),
+                     "-" if r.final_acc is None else f"{r.final_acc:.3f}"])
+    out.append(_table(["region", "rounds", "end_sim_s", "mean_round_s",
+                       "max_round_s", "handovers", "outages", "final_acc"],
+                      rows))
+    out.append("")
+    out.append("latency breakdown (simulated seconds)")
+    rows = []
+    for r in report.regions:
+        tot = r.compute + r.uplink + r.isl + r.idle
+        def pct(v):
+            return f"{100 * v / tot:.0f}%" if tot > 0 else "-"
+        rows.append([r.region, f"{r.compute:.1f} ({pct(r.compute)})",
+                     f"{r.uplink:.1f} ({pct(r.uplink)})",
+                     f"{r.isl:.1f} ({pct(r.isl)})",
+                     f"{r.idle:.1f} ({pct(r.idle)})"])
+    out.append(_table(["region", "compute", "uplink", "isl", "idle"], rows))
+    out.append("")
+    if report.anomalies:
+        out.append(f"top anomalies ({len(report.anomalies)})")
+        for a in report.anomalies:
+            out.append(f"  [{a.kind}] {a.message}")
+    else:
+        out.append("no anomalies detected")
+    return "\n".join(out)

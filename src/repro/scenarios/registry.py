@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.constellation import AccessInterval, WalkerStar
 from repro.fl.federation import FederationConfig
+from repro.obs import ObsConfig
 from repro.sim.dynamics import DynamicsConfig
 from repro.sim.propagation import Region, access_intervals_multi
 
@@ -45,6 +46,9 @@ class Scenario:
     strategy: str = "adaptive"
     # dynamics --------------------------------------------------------------
     dynamics: Optional[DynamicsConfig] = None
+    # observability (repro.obs): an ObsConfig or a bare JSONL trace
+    # path; disabled when None.  FLConfig.obs wins when both are set.
+    obs: Optional[ObsConfig | str] = None
     # cross-region federation (engine FL mode) ------------------------------
     # The federation policy decides WHO merges WHAT, WHEN, at WHAT ISL
     # price (repro.fl.federation): cadence, topology, staleness

@@ -74,16 +74,28 @@ class RoundEvents:
 
 
 class NetworkDynamics:
-    """Samples :class:`RoundEvents` from an explicit, threaded RNG."""
+    """Samples :class:`RoundEvents` from an explicit, threaded RNG.
+
+    ``tracer`` is the run's :class:`repro.obs.Tracer` (attached by
+    ``RegionTrainer``/``SAGINEngine``; the shared null tracer by
+    default): every realized *unobservable* perturbation is emitted as
+    an ``outage`` event against the tracer's current region/round
+    context.  Emission happens AFTER all draws — tracing never touches
+    the RNG stream, so trajectories are identical with obs on or off.
+    """
 
     def __init__(self, config: DynamicsConfig,
                  rng: Optional[np.random.Generator] = None, seed: int = 0):
+        from repro.obs import NULL_TRACER
         self.config = config
         self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self.tracer = NULL_TRACER
 
     def spawn(self) -> "NetworkDynamics":
         """Independent child stream (one per region in the engine)."""
-        return NetworkDynamics(self.config, rng=self.rng.spawn(1)[0])
+        child = NetworkDynamics(self.config, rng=self.rng.spawn(1)[0])
+        child.tracer = self.tracer
+        return child
 
     def sample_round(self, r: int, n_sats: int, n_clusters: int,
                      n_devices: int) -> RoundEvents:
@@ -106,4 +118,20 @@ class NetworkDynamics:
         if cfg.churn_prob > 0:
             off = rng.random(n_devices) < cfg.churn_prob
             ev.offline_devices = tuple(int(k) for k in np.flatnonzero(off))
+        tr = self.tracer
+        if tr.enabled:
+            m = tr.metrics
+            if ev.isl_scale != 1.0:
+                tr.event("outage", "isl_fade", event="isl",
+                         scale=ev.isl_scale)
+                m.counter("outage.isl").inc()
+            for n, d in sorted(ev.uplink_delays.items()):
+                tr.event("outage", f"uplink_c{n}", event="uplink",
+                         cluster=n, delay=d)
+                m.counter("outage.uplink").inc()
+            if ev.offline_devices:
+                tr.event("outage", "device_churn", event="churn",
+                         devices=list(ev.offline_devices))
+                m.counter("outage.churned_devices").inc(
+                    len(ev.offline_devices))
         return ev

@@ -150,6 +150,13 @@ class SAGINEngine:
         self.constellation = scenario.build_constellation()
         self.intervals = scenario.build_intervals(backend=backend)
         self.fl_config = fl
+        # ONE tracer for the whole run, shared by every region trainer
+        # (FLConfig.obs wins over Scenario.obs); repro.obs.NULL_TRACER
+        # when neither is set — every hook below is then a single branch
+        from repro.obs import resolve_obs
+        self.tracer = resolve_obs(
+            fl.obs if fl is not None and fl.obs is not None
+            else scenario.obs)
         self.trainers: List["RegionTrainer"] = []
         self.merges: List[MergeEvent] = []
         self.global_params = None
@@ -167,7 +174,8 @@ class SAGINEngine:
                                             region_index=i)
                 self.trainers.append(RegionTrainer(
                     cfg_i, scenario=scenario,
-                    intervals=self.intervals[region.name]))
+                    intervals=self.intervals[region.name],
+                    tracer=self.tracer))
             return
         nd = n_devices if n_devices is not None else scenario.n_devices
         na = n_air if n_air is not None else scenario.n_air
@@ -177,6 +185,8 @@ class SAGINEngine:
                 n_devices=nd, n_air=na,
                 samples_per_device=scenario.samples_per_device,
                 alpha=scenario.alpha, seed=region_seed(seed, i))
+            if dynamics is not None:
+                dynamics.tracer = self.tracer
             self.orchestrators.append(SAGINOrchestrator(
                 sagin, intervals=self.intervals[region.name], rng=rng,
                 dynamics=dynamics, strategy=scenario.strategy))
@@ -197,13 +207,24 @@ class SAGINEngine:
         heap = [(orch.wall_clock, i, 0)
                 for i, orch in enumerate(self.orchestrators)]
         heapq.heapify(heap)
+        tr = self.tracer
         while heap:
             _, i, r = heapq.heappop(heap)
             self.step_order.append((i, r))
             orch = self.orchestrators[i]
-            self.traces[i].records.append(orch.step(r))
+            name = self.scenario.regions[i].name
+            if tr.enabled:
+                tr.set_context(region=name, round=r, t_sim=orch.wall_clock)
+            rec = orch.step(r)
+            self.traces[i].records.append(rec)
+            if tr.enabled:
+                tr.span("round", f"{name}/r{r}", t_sim=rec.wall_clock_start,
+                        dur_sim=rec.realized_latency, case=rec.plan.case,
+                        latency_analytic=rec.latency,
+                        n_handovers=rec.schedule.n_handovers)
             if r + 1 < n_rounds:
                 heapq.heappush(heap, (orch.wall_clock, i, r + 1))
+        tr.flush()
         return self.traces
 
     def _run_fl(self, n_rounds: int) -> List[RegionTrace]:
@@ -248,6 +269,7 @@ class SAGINEngine:
             # no merging: the "global" model is undefined; expose None so
             # callers can tell one-global-model runs from independent ones
             self.global_params = None
+        self.tracer.flush()
         return self.traces
 
     def federation_state(self, barrier_round: int,
@@ -272,9 +294,25 @@ class SAGINEngine:
         from repro.fl.client import evaluate
 
         trainers = self.trainers
+        tr = self.tracer
         state = self.federation_state(barrier_round, trigger)
+        if tr.enabled:
+            for rs in state.regions:
+                tr.metrics.gauge(
+                    f"federation.isl_scale.{rs.name}").set(rs.isl_scale)
         plan = policy.plan(state)
         if plan is None:
+            # a skipped boundary (quorum miss, nothing to do) is itself
+            # an observable event — the report CLI surfaces these
+            if tr.enabled:
+                from repro.obs import FEDERATION_TRACK
+                tr.span("merge", f"{self.federation.policy}@r{barrier_round}"
+                        f" skipped", region=FEDERATION_TRACK,
+                        round=barrier_round,
+                        t_sim=max(t.wall_clock for t in trainers),
+                        skipped=True, policy=self.federation.policy,
+                        trigger=trigger)
+                tr.metrics.counter("merge.skipped").inc()
             return
         merged = policy.apply([trainers[j].params
                                for j in plan.participants], plan)
@@ -296,6 +334,31 @@ class SAGINEngine:
             # inside install_global before its next round can consume it
             t.install_global(merged, plan.time + cost)
         self.global_params = merged
+        if tr.enabled:
+            from repro.obs import FEDERATION_TRACK
+            quorum_miss = len(plan.participants) < len(trainers)
+            tr.span("merge", f"{plan.policy}@r{barrier_round}",
+                    region=FEDERATION_TRACK, round=barrier_round,
+                    t_sim=plan.time, dur_sim=max(costs, default=0.0),
+                    policy=plan.policy, hub=plan.hub,
+                    participants=list(plan.participants),
+                    recipients=list(plan.recipients),
+                    recipient_names=[trainers[j]._region_name
+                                     for j in plan.recipients],
+                    weights=weights, staleness=staleness,
+                    # recipient-aligned (skips the NaN accuracy sentinel
+                    # of non-recipients: NaN is not valid strict JSON)
+                    isl_costs=[costs[j] for j in plan.recipients],
+                    accuracies=[accs[j] for j in plan.recipients],
+                    quorum_miss=quorum_miss, trigger=trigger)
+            m = tr.metrics
+            m.counter("merge.count").inc()
+            if quorum_miss:
+                m.counter("merge.quorum_miss").inc()
+            for j, s in zip(plan.participants, plan.staleness):
+                m.histogram("merge.staleness_s").observe(float(s))
+            for cost in plan.isl_costs:
+                m.histogram("merge.isl_cost_s").observe(float(cost))
         self.merges.append(MergeEvent(
             barrier_round=barrier_round, time=plan.time,
             staleness=tuple(staleness), weights=tuple(weights),
@@ -355,13 +418,18 @@ def run_fl_all_regions(cfg, scenario: "Scenario | str"):
                                    name=f"{scenario.name}@{id(scenario):x}")
         register(scenario)
         transient = scenario.name
+    # one shared tracer across the per-region jobs (each run_fl building
+    # its own from cfg.obs would overwrite the same trace file N times)
+    from repro.obs import resolve_obs
+    tracer = resolve_obs(cfg.obs if cfg.obs is not None else scenario.obs)
     out = {}
     try:
         for i, region in enumerate(scenario.regions):
             region_cfg = _dc.replace(cfg, scenario=scenario.name,
                                      region_index=i)
-            out[region.name] = run_fl(region_cfg)
+            out[region.name] = run_fl(region_cfg, tracer=tracer)
     finally:
         if transient is not None:
             SCENARIOS.pop(transient, None)
+    tracer.flush()
     return out

@@ -375,6 +375,82 @@ def test_host001_negative_outside_round_loop(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# OBS001 — tracer/metrics call inside a jitted function
+# ---------------------------------------------------------------------------
+def test_obs001_positive_decorated(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def step(tracer, x):
+            tracer.span("round", "r")     # runs at trace time only
+            return x * 2
+    """)
+    assert rules_hit(out) == ["OBS001"]
+    assert out[0].line == 6
+
+
+def test_obs001_positive_partial_and_attribute_receiver(tmp_path):
+    out = lint(tmp_path, """
+        import functools
+        import jax
+
+        class Engine:
+            @functools.partial(jax.jit, static_argnums=(0,))
+            def step(self, x):
+                self.tracer.event("outage", "isl")
+                self.metrics.counter("n").inc()
+                return x
+    """)
+    assert rules_hit(out) == ["OBS001"]
+    assert len(out) == 2
+
+
+def test_obs001_positive_module_level_jit(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        from repro.obs import NULL_TRACER
+
+        def _inner(x):
+            NULL_TRACER.span("round", "r")
+            return x + 1
+
+        step = jax.jit(_inner)
+    """)
+    assert rules_hit(out) == ["OBS001"]
+
+
+def test_obs001_negative_outside_jit(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x * 2
+
+        def round_driver(tracer, x):
+            y = step(x)
+            tracer.span("round", "r")     # host side: fine
+            tracer.metrics.histogram("h").observe(1.0)
+            return y
+    """)
+    assert out == []
+
+
+def test_obs001_negative_unrelated_receiver_methods(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def step(layout, cfg, x):
+            w = layout.span("a", "b")     # not a tracer/metrics object
+            cfg.set(3)
+            return x * w
+    """)
+    assert out == []
+
+
+# ---------------------------------------------------------------------------
 # golden findings, clean file, parse errors
 # ---------------------------------------------------------------------------
 def test_golden_file_line_rule_triples(tmp_path):

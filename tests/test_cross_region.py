@@ -119,7 +119,13 @@ def test_synchronous_policy_reproduces_pre_refactor_engine_golden():
     assert m.staleness == gold["merge0_staleness"]
     assert m.isl_costs == gold["merge0_isl_costs"]
     assert m.accuracies == gold["merge0_accuracies"]
-    assert _param_sum(eng.global_params) == gold["global_param_sum"]
+    # The float64 checksum over every float32 parameter is sensitive to
+    # XLA's reduction order inside the training steps, which shifts
+    # across XLA/BLAS releases (~1e-7 relative) while every trajectory
+    # field above (accuracies, times, weights, staleness, ISL costs)
+    # stays exact.  Tolerate only that backend noise.
+    assert _param_sum(eng.global_params) == pytest.approx(
+        gold["global_param_sum"], rel=1e-6)
 
 
 def test_synchronous_policy_reproduces_multi_region_preset_golden():
@@ -131,7 +137,9 @@ def test_synchronous_policy_reproduces_multi_region_preset_golden():
     m = eng.merges[0]
     assert m.weights == gold["merge0_weights"]
     assert m.isl_costs == gold["merge0_isl_costs"]
-    assert _param_sum(eng.global_params) == gold["global_param_sum"]
+    # see the reduction-order note in the XR2 golden test above
+    assert _param_sum(eng.global_params) == pytest.approx(
+        gold["global_param_sum"], rel=1e-6)
 
 
 def test_region_trainer_stepping_is_run_fl():

@@ -1,0 +1,234 @@
+"""repro.obs tests: trace schema round-trip, Perfetto export, the
+disabled-mode no-op identity contract (bit-identical trajectories with
+tracing on or off at equal seeds), metrics math, report aggregation,
+and the ``python -m repro.obs report`` CLI exit codes."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.fl import FLConfig, run_fl
+from repro.fl.federation import FederationConfig
+from repro.obs import (FEDERATION_TRACK, NULL_TRACER, Metrics, ObsConfig,
+                       Span, Tracer, analyze, load_jsonl, perfetto_path,
+                       resolve_obs, to_perfetto)
+from repro.obs.__main__ import main as obs_main
+from repro.scenarios import Scenario
+from repro.sim import Region, SAGINEngine
+
+TINY = dict(dataset="mnist", n_rounds=2, n_devices=4, n_air=1, h_local=2,
+            train_fraction=0.005, eval_size=64, seed=0)
+
+XR2 = Scenario(
+    name="_obs_xr2", description="two-region obs test scenario",
+    regions=(Region("indiana", 40.0, -86.0), Region("nairobi", -1.3, 36.8)),
+    n_devices=4, n_air=1,
+    federation=FederationConfig(policy="synchronous", every=1,
+                                topology="star", half_life=600.0),
+    horizon=6 * 3600.0)
+
+
+def tiny_cfg(**overrides):
+    kw = dict(TINY)
+    kw.update(overrides)
+    return FLConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Schema round-trip + Perfetto export ----------------------------------------
+# ---------------------------------------------------------------------------
+def test_span_schema_roundtrip(tmp_path):
+    tr = Tracer(ObsConfig(path=str(tmp_path / "t.jsonl")))
+    tr.set_context(region="indiana", round=0, t_sim=10.0)
+    tr.span("round", "indiana/r0", dur_sim=5.0, case=2, acc=0.5)
+    tr.event("outage", "uplink_c0", event="uplink", delay=3.0)
+    tr.span("merge", "sync@r1", region=FEDERATION_TRACK, round=1,
+            t_sim=20.0, dur_sim=1.0, participants=[0, 1])
+    dest = tr.flush()
+    assert dest == str(tmp_path / "t.jsonl")
+
+    back = load_jsonl(dest)
+    assert back == tr.spans
+    # every line carries the schema tag
+    with open(dest) as fh:
+        for line in fh:
+            assert json.loads(line)["schema"] == "repro-trace/1"
+
+    # Perfetto sibling: valid strict JSON, one thread track per region,
+    # X event for the duration span, instant event for the zero-dur one
+    pf_file = perfetto_path(dest)
+    with open(pf_file) as fh:
+        pf = json.load(fh)
+    events = pf["traceEvents"]
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {"indiana", FEDERATION_TRACK} <= names
+    phases = {e["ph"] for e in events}
+    assert {"X", "i", "M"} <= phases
+    x = next(e for e in events if e["ph"] == "X" and e["cat"] == "round")
+    assert x["ts"] == pytest.approx(10.0 * 1e6)
+    assert x["dur"] == pytest.approx(5.0 * 1e6)
+
+
+def test_span_kind_vocabulary_is_closed():
+    tr = Tracer(ObsConfig())
+    with pytest.raises(ValueError, match="unknown span kind"):
+        tr.span("launch", "x")
+    # disabled tracer never validates (and never records)
+    assert NULL_TRACER.span("launch", "x") is None
+    assert NULL_TRACER.spans == []
+
+
+def test_resolve_obs_coercions(tmp_path):
+    assert resolve_obs(None) is NULL_TRACER
+    tr = Tracer(ObsConfig())
+    assert resolve_obs(tr) is tr
+    from_str = resolve_obs(str(tmp_path / "a.jsonl"))
+    assert from_str.enabled and from_str.config.path.endswith("a.jsonl")
+    assert resolve_obs(ObsConfig(enabled=False)) is NULL_TRACER
+    assert resolve_obs(ObsConfig(device_timing=True)).device_timing
+    with pytest.raises(TypeError, match="obs must be"):
+        resolve_obs(42)
+
+
+def test_metrics_registry_math():
+    m = Metrics()
+    m.counter("n").inc()
+    m.counter("n").inc(4)
+    m.gauge("g").set(2.5)
+    h = m.histogram("h")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert m.counter("n").value == 5
+    assert m.gauge("g").value == 2.5
+    assert h.count == 4 and h.mean == pytest.approx(2.5)
+    assert h.vmin == 1.0 and h.vmax == 4.0
+    assert h.percentile(0) == 1.0 and h.percentile(100) == 4.0
+    assert h.percentile(50) in (2.0, 3.0)
+    snap = m.snapshot()
+    assert snap["n"] == 5 and snap["g"] == 2.5
+    assert isinstance(snap["h"], dict) and snap["h"]["count"] == 4
+    # null registry: same surface, records nothing
+    nm = NULL_TRACER.metrics
+    nm.counter("x").inc()
+    nm.histogram("x").observe(1.0)
+    assert nm.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# Disabled-mode no-op identity ----------------------------------------------
+# ---------------------------------------------------------------------------
+def test_trajectories_bit_identical_obs_on_vs_off(tmp_path):
+    """The tracer only observes: enabling it (device_timing included)
+    must not change a single trajectory value at equal seeds."""
+    base = run_fl(tiny_cfg(scenario="device_churn"))
+    obs = ObsConfig(path=str(tmp_path / "t.jsonl"), device_timing=True)
+    traced = run_fl(tiny_cfg(scenario="device_churn", obs=obs))
+    assert traced.accuracies == base.accuracies
+    assert traced.losses == base.losses
+    assert traced.latencies == base.latencies
+    assert traced.times == base.times
+    # ...and the trace actually recorded the run
+    spans = load_jsonl(str(tmp_path / "t.jsonl"))
+    assert {s.kind for s in spans} >= {"round", "offload"}
+    assert any(s.kind == "outage" for s in spans)  # churn dynamics
+
+
+# ---------------------------------------------------------------------------
+# End-to-end traced engine run + CLI -----------------------------------------
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def traced_engine_run(tmp_path_factory):
+    """One traced two-region federated run; batched execution so bucket
+    dispatches appear. Shared by the span-kind and CLI tests."""
+    path = str(tmp_path_factory.mktemp("obs") / "engine.jsonl")
+    cfg = tiny_cfg(scenario=None, execution="batched",
+                   obs=ObsConfig(path=path))
+    eng = SAGINEngine(XR2, fl=cfg)
+    eng.run(2)
+    return path, eng
+
+
+def test_traced_engine_run_has_four_span_kinds(traced_engine_run):
+    path, eng = traced_engine_run
+    spans = load_jsonl(path)
+    kinds = {s.kind for s in spans}
+    assert {"round", "offload", "merge", "bucket_dispatch"} <= kinds
+    # both region tracks plus the synthetic federation track rendered
+    pf = to_perfetto(spans)
+    tracks = {e["args"]["name"] for e in pf["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"indiana", "nairobi", FEDERATION_TRACK} <= tracks
+    # the engine's shared tracer collected metrics along the way
+    snap = eng.tracer.metrics.snapshot()
+    assert snap["offload.bytes"] > 0
+    assert snap["merge.count"] >= 1
+    assert snap["cohort.bucket_dispatches"] > 0
+
+
+def test_report_cli_exit_codes(traced_engine_run, tmp_path, capsys):
+    path, _ = traced_engine_run
+    # 0: good trace, tables mention both regions
+    assert obs_main(["report", path]) == 0
+    out = capsys.readouterr().out
+    assert "indiana" in out and "nairobi" in out
+    assert "latency breakdown" in out
+    # 0: JSON mode is strict JSON
+    assert obs_main(["report", path, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_spans"] == len(load_jsonl(path))
+    # 1: empty trace
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert obs_main(["report", str(empty)]) == 1
+    # 2: missing and corrupt traces, and usage errors
+    assert obs_main(["report", str(tmp_path / "missing.jsonl")]) == 2
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("{not json}\n")
+    assert obs_main(["report", str(bad)]) == 2
+    assert obs_main([]) == 2
+
+
+def test_perfetto_cli_subcommand(traced_engine_run, tmp_path, capsys):
+    path, _ = traced_engine_run
+    out = str(tmp_path / "conv.perfetto.json")
+    assert obs_main(["perfetto", path, "--out", out]) == 0
+    capsys.readouterr()
+    with open(out) as fh:
+        pf = json.load(fh)
+    assert pf["otherData"]["schema"] == "repro-trace/1"
+    assert len(pf["traceEvents"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Report aggregation on synthetic spans --------------------------------------
+# ---------------------------------------------------------------------------
+def test_analyze_flags_stragglers_and_quorum_misses():
+    spans = [
+        Span("round", "a/r0", region="a", round=0, t_sim=0, dur_sim=10.0),
+        Span("round", "a/r1", region="a", round=1, t_sim=10, dur_sim=10.0,
+             attrs={"n_handovers": 3, "acc": 0.4}),
+        Span("round", "a/r2", region="a", round=2, t_sim=20, dur_sim=30.0),
+        Span("handover", "h", region="a", round=1, t_sim=12, dur_sim=2.0),
+        Span("merge", "sync@r2 skipped", region=FEDERATION_TRACK, round=2,
+             t_sim=50.0, attrs={"skipped": True, "policy": "sync"}),
+    ]
+    rep = analyze(spans, top=10)
+    assert [r.region for r in rep.regions] == ["a"]
+    a = rep.regions[0]
+    assert a.rounds == 3 and a.handovers == 1
+    assert a.final_acc == 0.4
+    kinds = {an.kind for an in rep.anomalies}
+    assert {"straggler", "repeated_handover", "quorum_miss"} <= kinds
+    # skipped merges sort above everything else
+    assert rep.anomalies[0].kind == "quorum_miss"
+    # breakdown components are non-negative and bounded by the run
+    assert a.compute >= 0 and a.idle >= 0
+    assert a.isl == pytest.approx(2.0)
+
+
+def test_obsconfig_replace_is_frozen_dataclass():
+    cfg = ObsConfig(path="x.jsonl")
+    assert dataclasses.replace(cfg, device_timing=True).device_timing
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.path = "y"
