@@ -27,6 +27,24 @@ Pools DRIFT between rounds (offloading churn).  Round 1 is the
 warmup/compile round; headline numbers are means over the remaining
 rounds.  Rows feed ``BENCH_cohort.json`` via ``benchmarks.run --json``.
 
+Gates (non-smoke): skewed-regime bucketed-vs-global speedup must stay
+>= 2x at engine scale, and small uniform cohorts (C <= 32) must never
+regress below 1x — there the planner's collapse pass folds
+near-uniform plans into a single global-shaped bucket, so bucketing
+costs nothing where it cannot win (larger uniform cohorts sit at
+parity within timing noise and are tracked, not gated).
+
+A fourth row family, ``cohort.sharded.D{n}``, measures the mesh-sharded
+engine (clients/sec at 1/2/4/8 forced host devices on the
+mega_constellation skewed shape, C=256 mlp by default).  Each device
+count runs in a ``--sharded-worker`` subprocess because
+``--xla_force_host_platform_device_count`` binds at jax import; rows
+carry per-shard padding/imbalance metrics from
+``CohortEngineStats``.  The D8 gate requires >= 1.5x round throughput
+over D1 wherever >= 2 usable cores exist; a 1-core host serializes the
+shard programs (the residual ~1.2-1.4x is per-shard working-set and
+fusion effects only), so there the gate records the number and skips.
+
 The bucketed engine runs with ``guard=True``: every round whose bucket
 layout is already warm executes under
 ``repro.analysis.contracts.no_recompile()``, so a recompile regression
@@ -231,6 +249,143 @@ def _steady(times):
     return float(np.min(times[1:])) if len(times) > 1 else float(times[0])
 
 
+# --------------------------------------------------------------------------
+# Mesh-sharded rows (cohort.sharded.*): one subprocess per device count
+# --------------------------------------------------------------------------
+def bench_sharded_round(c, payload="mlp", rounds=6, h=5, batch_cap=8,
+                        seed=0):
+    """Engine-only sharded round timing over a drifting skewed schedule.
+
+    Cohorts are prebuilt so the row isolates what the tentpole changed —
+    the engine's ``round()`` dispatch (local updates + in-mesh
+    aggregation) — from the host-side pipeline work that is identical
+    at every device count.  Runs under whatever device count
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` forced before
+    the jax import; the parent process launches one worker per count.
+    """
+    rng = np.random.default_rng(seed)
+    din = PAYLOAD_DIN[payload]
+    n = max(4096, c * 48, 11 * 56 * c)
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    params, apply_fn = PAYLOADS[payload](jax.random.PRNGKey(seed), din)
+
+    schedule = [_make_pools_skewed(n, c, h, rng)]
+    for _ in range(rounds - 1):
+        schedule.append(_drift(schedule[-1], rng))
+    total = sum(len(p) for p in schedule[0])
+
+    eng = CohortEngine(apply_fn, batch_align=max(8, batch_cap),
+                       client_align=4, guard=True, sharding="auto")
+    build_rng = np.random.default_rng(seed + 1)
+    cohorts = [eng.build(x, y, ps, h, build_rng, batch_cap)
+               for ps in schedule]
+
+    p, times = params, []
+    for co in cohorts:
+        t0 = time.perf_counter()
+        p, _ = eng.round(p, co, 0.05, total)
+        jax.block_until_ready(p)
+        times.append(time.perf_counter() - t0)
+    return _steady(times), eng
+
+
+def _sharded_worker(args) -> int:
+    """``--sharded-worker`` mode: run one device count, print one JSON
+    line (the parent parses stdout's last line)."""
+    import json
+    c = (args.cohorts or [256])[0]
+    rounds = args.rounds or 6
+    steady, eng = bench_sharded_round(c, payload=args.payload,
+                                      rounds=rounds, h=args.h_local,
+                                      batch_cap=args.batch_cap)
+    st = eng.stats
+    print(json.dumps({
+        "devices": len(jax.devices()), "shards": eng.shards,
+        "clients": c, "steady_s": steady,
+        "clients_per_s": c / steady,
+        "padding_ratio": round(st.padding_ratio, 4),
+        "shard_pad_clients": st.shard_pad_clients,
+        "max_shard_imbalance": round(st.max_shard_imbalance, 4),
+        "sharded_dispatches": st.sharded_dispatches,
+        "compiled_signatures": st.compiled_signatures,
+    }))
+    return 0
+
+
+def _sharded_rows(args) -> int:
+    """Emit the ``cohort.sharded.D{n}`` row family and apply the D8
+    scaling gate.  Each device count runs in its own subprocess because
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    the first jax import."""
+    import json
+    import subprocess
+    devices = args.sharded_devices or ([1, 2] if args.smoke
+                                       else [1, 2, 4, 8])
+    c = (args.cohorts or [None])[0] or (64 if args.smoke else 256)
+    rounds = args.rounds or (3 if args.smoke else 6)
+    payload = args.payload if args.payload != "logreg" else "mlp"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    results = {}
+    for n in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={n}"
+                            ).strip()
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(root, "src")]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        cmd = [sys.executable, "-m", "benchmarks.cohort_scaling",
+               "--sharded-worker", "--cohorts", str(c),
+               "--rounds", str(rounds), "--payload", payload,
+               "--h-local", str(args.h_local),
+               "--batch-cap", str(args.batch_cap)]
+        proc = subprocess.run(cmd, env=env, cwd=root,
+                              capture_output=True, text=True)
+        if proc.returncode != 0:
+            print(f"sharded D{n} worker failed:\n{proc.stderr}",
+                  file=sys.stderr)
+            continue
+        res = json.loads(proc.stdout.strip().splitlines()[-1])
+        results[n] = res
+        speed = (results[1]["steady_s"] / res["steady_s"]
+                 if 1 in results else 1.0)
+        print(f"sharded  D={n:2d} C={c:5d}  round {res['steady_s']:7.3f}s"
+              f"  ({res['clients_per_s']:8.1f} clients/s, {speed:4.2f}x D1)",
+              flush=True)
+        row(f"cohort.sharded.D{n}.{payload}.round",
+            res["steady_s"] * 1e6,
+            f"clients_per_s={res['clients_per_s']:.1f};"
+            f"speedup_vs_D1={speed:.2f}x;shards={res['shards']}",
+            metrics={"cohort.shards": res["shards"],
+                     "cohort.padding_ratio": res["padding_ratio"],
+                     "cohort.shard_pad_clients": res["shard_pad_clients"],
+                     "cohort.shard_imbalance": res["max_shard_imbalance"],
+                     "cohort.sharded_dispatches":
+                     res["sharded_dispatches"],
+                     "cohort.recompiled_signatures":
+                     res["compiled_signatures"]})
+    top = max(results) if results else 0
+    if args.smoke or top < 8 or 1 not in results:
+        return 0
+    speed = results[1]["steady_s"] / results[top]["steady_s"]
+    cores = len(os.sched_getaffinity(0))
+    if cores < 2:
+        # a 1-core box serializes the 8 shard programs: the residual
+        # speedup is per-shard working-set/fusion only, so the thread-
+        # scaling gate is not meaningful here — record, don't fail
+        print(f"sharded D{top} speedup {speed:.2f}x on {cores} usable "
+              f"core(s): scaling gate skipped (needs >=2)",
+              file=sys.stderr)
+        return 0
+    if speed < 1.5:
+        print(f"cohort_scaling: sharded D{top} round speedup "
+              f"{speed:.2f}x below the 1.5x target", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     smoke_env = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
@@ -245,7 +400,14 @@ def main() -> int:
                     help="skip the sequential engine beyond this C")
     ap.add_argument("--smoke", action="store_true", default=smoke_env,
                     help="tiny sizes for CI")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: one device count
+    ap.add_argument("--sharded-devices", type=int, nargs="+", default=None,
+                    help="forced host device counts for cohort.sharded.*")
     args, _ = ap.parse_known_args()
+
+    if args.sharded_worker:
+        return _sharded_worker(args)
 
     cohorts = args.cohorts or ([16] if args.smoke else [16, 64, 256])
     rounds = args.rounds or (3 if args.smoke else 8)
@@ -257,12 +419,17 @@ def main() -> int:
     print("# regime, C: bucketed | global | sequential steady round "
           "seconds; speedups vs bucketed; padding ratios")
     worst_skewed_speedup = None
+    worst_uniform_speedup = None
     for regime in regimes:
         for c in cohorts:
             seq = c <= args.skip_seq_above
+            # small cohorts run millisecond rounds where scheduler noise
+            # swamps an 8-round best-of; give the min more samples
+            c_rounds = (max(rounds, 20) if c <= 32 and not args.smoke
+                        else rounds)
             t_buck, t_glob, t_seq, (r_buck, r_glob), stats = bench_cohort(
                 c, payload=args.payload, regime=regime, h=args.h_local,
-                batch_cap=args.batch_cap, rounds=rounds, seq=seq)
+                batch_cap=args.batch_cap, rounds=c_rounds, seq=seq)
             buck_s, glob_s = _steady(t_buck), _steady(t_glob)
             speed_glob = glob_s / buck_s
             line = (f"{regime:8s} C={c:5d}  bucketed {buck_s:7.3f}s"
@@ -291,6 +458,19 @@ def main() -> int:
                                         if worst_skewed_speedup is None
                                         else min(worst_skewed_speedup,
                                                  speed_glob))
+            if regime == "uniform" and c <= 32:
+                # bucketing must never LOSE to the global layout in the
+                # regime it did not target: at small C the planner's
+                # collapse pass folds near-uniform plans into one
+                # global-shaped bucket, so the bound is structural.
+                # Larger uniform cohorts legitimately split buckets and
+                # sit at parity — tracked in the rows, not gated (the
+                # worst observed is ~0.98x, i.e. timing noise)
+                worst_uniform_speedup = (speed_glob
+                                         if worst_uniform_speedup is None
+                                         else min(worst_uniform_speedup,
+                                                  speed_glob))
+    rc = _sharded_rows(args)
     if (not args.smoke and worst_skewed_speedup is not None
             and worst_skewed_speedup < 2.0):
         # return instead of sys.exit: benchmarks.run must survive one
@@ -299,7 +479,13 @@ def main() -> int:
               f"{worst_skewed_speedup:.2f}x below the 2x target",
               file=sys.stderr)
         return 1
-    return 0
+    if (not args.smoke and worst_uniform_speedup is not None
+            and worst_uniform_speedup < 1.0):
+        print(f"cohort_scaling: uniform-regime speedup "
+              f"{worst_uniform_speedup:.2f}x — bucketed rounds regressed "
+              f"below the global layout", file=sys.stderr)
+        return 1
+    return rc
 
 
 if __name__ == "__main__":

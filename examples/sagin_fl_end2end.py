@@ -99,6 +99,13 @@ def main():
                     choices=["auto", "batched", "sequential"],
                     help="round execution mode (FLConfig.execution); "
                          "batched emits bucket_dispatch trace spans")
+    ap.add_argument("--cohort-sharding", default="auto",
+                    choices=["auto", "mesh", "off"],
+                    help="mesh-shard the batched engine's bucket client "
+                         "axis over visible devices "
+                         "(FLConfig.cohort_sharding); force multiple CPU "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -113,7 +120,7 @@ def main():
                   h_local=3, eval_size=1024,
                   use_constellation=args.constellation,
                   scenario=args.scenario, execution=args.execution,
-                  obs=args.trace)
+                  cohort_sharding=args.cohort_sharding, obs=args.trace)
 
     if args.scenario and args.global_model:
         import math

@@ -5,9 +5,12 @@ Three reusable context managers, generalizing the PR-4 recompile lock so
 suite all assert the same invariants through one door:
 
 * :func:`no_recompile` — no (or at most ``allow``) new jit lowerings
-  inside the block.  Backed by jax's internal lowering counters with a
-  version-tolerant fallback chain; degrades to an inert pass-through
-  (with a warning) rather than breaking when jax internals move.
+  inside the block.  Backed by a passive ``jax.monitoring`` compile-
+  event listener (warm dispatches stay on the C++ fast path — the
+  contract adds no per-call cost, so engines can arm it on every
+  round), falling back to jax's internal test-utility lowering
+  counters, then degrading to an inert pass-through (with a warning)
+  rather than breaking when jax internals move.
 * :func:`assert_donated` — every watched buffer was actually consumed
   by a ``donate_argnums`` position inside the block.  On backends where
   donation is a documented no-op (CPU) the failure downgrades to a
@@ -38,13 +41,43 @@ class ContractViolation(AssertionError):
 class RecompileCount:
     """Live view of the lowering count inside a ``no_recompile`` block."""
 
-    def __init__(self, box=None):
-        self._box = box        # jtu counter list, or None when unavailable
-        self.enforced = box is not None
+    def __init__(self, get=None):
+        self._get = get        # zero-arg count reader, None = unenforced
+        self.enforced = get is not None
 
     @property
     def count(self) -> int:
-        return int(self._box[0]) if self._box is not None else 0
+        return int(self._get()) if self._get is not None else 0
+
+
+# Monitoring-based counter: one module-level listener bumps a monotone
+# count on every jaxpr trace / backend compile; blocks snapshot it on
+# entry.  Listeners are passive — jit's warm C++ fast path is untouched
+# (the jtu fallback counters below patch the dispatch internals and cost
+# a few hundred microseconds per call inside the block).
+_COMPILE_EVENTS = ("/jax/core/compile/jaxpr_trace_duration",
+                   "/jax/core/compile/backend_compile_duration")
+_event_count = 0
+_listener_installed = False
+
+
+def _install_compile_listener() -> bool:
+    global _listener_installed
+    if _listener_installed:
+        return True
+    try:
+        from jax._src import monitoring
+    except Exception:                                    # pragma: no cover
+        return False
+
+    def _on_event(event: str, duration_secs: float = 0.0, **kw) -> None:
+        global _event_count
+        if event in _COMPILE_EVENTS:
+            _event_count += 1
+
+    monitoring.register_event_duration_secs_listener(_on_event)
+    _listener_installed = True
+    return True
 
 
 def _lowering_counter():
@@ -73,20 +106,28 @@ def no_recompile(allow: int = 0,
 
     A *lowering* is jax building a new executable: the warm path of a
     round loop must trigger none, so any count above ``allow`` means a
-    shape/dtype/static-arg signature silently churned.  Yields a
-    :class:`RecompileCount` whose ``.count`` is readable after the block.
+    shape/dtype/static-arg signature silently churned.  One fresh
+    compile scores a small bounded number of events (trace + backend
+    compile), not exactly 1 — size ``allow`` budgets accordingly.
+    Yields a :class:`RecompileCount` whose ``.count`` is readable after
+    the block.
     """
-    counter = _lowering_counter()
-    if counter is None:                                  # pragma: no cover
-        warnings.warn(
-            "no_recompile(): jax lowering counters unavailable in this "
-            "jax version; contract not enforced", RuntimeWarning,
-            stacklevel=3)
-        yield RecompileCount(None)
-        return
-    with counter() as box:
-        view = RecompileCount(box)
+    if _install_compile_listener():
+        start = _event_count
+        view = RecompileCount(lambda: _event_count - start)
         yield view
+    else:                                                # pragma: no cover
+        counter = _lowering_counter()
+        if counter is None:
+            warnings.warn(
+                "no_recompile(): jax lowering counters unavailable in "
+                "this jax version; contract not enforced", RuntimeWarning,
+                stacklevel=3)
+            yield RecompileCount(None)
+            return
+        with counter() as box:
+            view = RecompileCount(lambda: int(box[0]))
+            yield view
     n = view.count
     if n > allow:
         where = f" [{label}]" if label else ""

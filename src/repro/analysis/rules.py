@@ -28,6 +28,10 @@ HOST001   warning   ``.item()`` / ``float()`` / ``np.asarray()`` on a
 OBS001    error     ``repro.obs`` Tracer/Metrics call inside a
                     jit-decorated (or module-level-jitted) function —
                     runs at trace time, not per execution
+SHARD001  error     ``jax.lax`` collective (``psum``/``pmean``/...)
+                    with a literal axis name in a function never wired
+                    into a ``shard_map``/``pmap`` mesh context in its
+                    module (unbound axis at trace time)
 ========  ========  ==================================================
 
 All rules resolve import aliases (``import numpy as np``, ``from jax
@@ -930,3 +934,113 @@ def check_obs001(ctx: FileContext):
                        f"metrics recorded here are wrong and a host "
                        f"callback would break async dispatch; hoist the "
                        f"instrumentation outside the compiled function")
+
+
+# ---------------------------------------------------------------------------
+# SHARD001: collective with a literal axis name outside shard_map context
+# ---------------------------------------------------------------------------
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                "psum_scatter"}
+
+
+def _is_shard_map_origin(origin: Optional[str]) -> bool:
+    return origin is not None and (origin == "shard_map"
+                                   or origin.endswith(".shard_map"))
+
+
+def _collective_axis_arg(node: ast.Call) -> Optional[ast.expr]:
+    """The axis-name argument of a ``jax.lax`` collective call (second
+    positional, or the ``axis_name`` keyword)."""
+    for kw in node.keywords:
+        if kw.arg == "axis_name":
+            return kw.value
+    if len(node.args) >= 2:
+        return node.args[1]
+    return None
+
+
+def _literal_axis_names(node: Optional[ast.expr]) -> Optional[List[str]]:
+    """String-literal axis names of a collective call, or None when the
+    axis flows in through a variable (helpers like
+    ``hierarchical_weighted_psum`` take the axes as a parameter and are
+    exercised under a caller's mesh — out of static reach, skipped)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        names = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            names.append(elt.value)
+        return names or None
+    return None
+
+
+@register("SHARD001", "collective-outside-shard-map", ERROR,
+          (LIBRARY, BENCH, EXAMPLE),
+          "jax.lax collective with a literal axis name outside any "
+          "shard_map context")
+def check_shard001(ctx: FileContext):
+    """``jax.lax.psum``/``pmean``/... with a LITERAL axis name is only
+    meaningful inside a manual-mesh program: the axis must be bound by a
+    ``shard_map`` (or ``pmap``) enclosing the traced function.  A
+    collective whose enclosing function is never wired into one fails at
+    runtime with an unbound-axis error — or worse, gets copy-pasted into
+    a single-device path where it silently never reduces.
+
+    A function counts as shard_map context when (in this module) it is
+    passed to ``shard_map``/``pmap`` by name, or it lexically contains a
+    ``shard_map``/``pmap`` call (the closure-factory idiom of
+    ``CohortEngine._make_sharded_step``/``make_replica_agg_step``).
+    Axis names arriving through parameters are skipped — preferring
+    missed corner cases over false positives, per the module docstring.
+    """
+    imports = ctx.imports
+
+    def _is_binder(origin: Optional[str]) -> bool:
+        return _is_shard_map_origin(origin) or origin in (
+            "jax.pmap", "jax.experimental.maps.xmap")
+
+    # functions passed to shard_map/pmap by name anywhere in the module
+    wired: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _is_binder(
+                _resolve_call(node, imports)):
+            if node.args and isinstance(node.args[0], ast.Name):
+                wired.add(node.args[0].id)
+
+    def _contains_binder(fn: ast.AST) -> bool:
+        return any(isinstance(n, ast.Call)
+                   and _is_binder(_resolve_call(n, imports))
+                   for n in ast.walk(fn))
+
+    fn_types = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+    def visit(node: ast.AST, covered: bool):
+        if isinstance(node, fn_types):
+            name = getattr(node, "name", None)
+            covered = (covered or name in wired
+                       or _contains_binder(node))
+        for child in ast.iter_child_nodes(node):
+            yield from visit(child, covered)
+        if not (isinstance(node, ast.Call) and not covered):
+            return
+        origin = _resolve_call(node, imports)
+        if origin is None or not origin.startswith("jax.lax."):
+            return
+        op = origin.rsplit(".", 1)[1]
+        if op not in _COLLECTIVES:
+            return
+        names = _literal_axis_names(_collective_axis_arg(node))
+        if not names:
+            return
+        yield (node,
+               f"jax.lax.{op} over axis {names!r} outside any shard_map/"
+               f"pmap context: no enclosing function is wired into a "
+               f"mesh here, so the axis name is unbound at trace time; "
+               f"dispatch through shard_map (repro.compat.shard_map) or "
+               f"take the axis names as a parameter like "
+               f"repro.fl.aggregation.hierarchical_weighted_psum")
+
+    yield from visit(ctx.tree, False)

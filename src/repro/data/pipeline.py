@@ -18,11 +18,17 @@ Two entry points feed the FL round driver:
   constant factor of real FLOPs instead of growing with pool skew as
   the global-``Bmax`` layout does.  Bucket client counts are quantized
   geometrically too (powers of two, floored at ``client_align``), which
-  keeps the set of compiled-step signatures tiny and drift-stable.
+  keeps the set of compiled-step signatures tiny and drift-stable.  In
+  shard-aware mode (``client_multiple`` = the mesh's ``data`` axis
+  size) the client grid additionally divides evenly across mesh shards
+  so buckets can dispatch through ``shard_map`` without a remainder
+  shard, and a final collapse pass folds dispatch-bound small cohorts
+  back into a single bucket.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
@@ -205,7 +211,9 @@ class BucketPlan:
 
 def plan_buckets(widths: Sequence[int], batch_align: int = 32,
                  client_align: int = 4,
-                 merge_slack: float = 1.25) -> List[BucketPlan]:
+                 merge_slack: float = 1.25,
+                 client_multiple: int = 1,
+                 collapse_slack: float = 1.5) -> List[BucketPlan]:
     """Partition clients into geometric batch-width buckets.
 
     Every client lands in the bucket whose width is the smallest
@@ -217,6 +225,13 @@ def plan_buckets(widths: Sequence[int], batch_align: int = 32,
     previously compiled step signatures instead of forcing a recompile
     per distinct client count.
 
+    ``client_multiple`` is the shard-aware planner mode: every
+    ``c_bucket`` must also be divisible by it (the mesh's ``data`` axis
+    size), so a bucket's client axis splits evenly across shards.  The
+    client grid becomes ``lcm(client_align, client_multiple) * 2**k`` —
+    still geometric, so drift-stability of compiled signatures is
+    preserved.
+
     A greedy coalescing pass then merges a bucket into the next-wider
     one whenever the joint layout costs at most ``merge_slack`` times
     the separate layouts: near-uniform pools collapse back to a single
@@ -224,11 +239,19 @@ def plan_buckets(widths: Sequence[int], batch_align: int = 32,
     already handles well), while skewed pools — where merging would
     multiply the padding — stay split.  The constant-factor padding
     bound only weakens by ``merge_slack``.
+
+    Finally, when the whole cohort laid out as ONE bucket (every client
+    padded to the widest bucket) costs at most ``collapse_slack`` times
+    the multi-bucket layout, the plan collapses to that single bucket:
+    small cohorts are dispatch-bound, not padding-bound, and paying a
+    bounded padding premium to halve the dispatch count is a win there
+    (the uniform C=16 regime regressed to 0.62x of the global layout
+    before this pass).  ``collapse_slack <= 0`` disables the pass.
     """
     groups: dict = {}
     for pos, w in enumerate(widths):
         groups.setdefault(next_geometric(w, batch_align), []).append(pos)
-    align = max(1, int(client_align))
+    align = math.lcm(max(1, int(client_align)), max(1, int(client_multiple)))
 
     def cost(members, b):
         return next_geometric(len(members), align) * b
@@ -243,6 +266,14 @@ def plan_buckets(widths: Sequence[int], batch_align: int = 32,
                 merged[-1] = (b, joint)
                 continue
         merged.append((b, list(groups[b])))
+
+    if collapse_slack > 0 and len(merged) > 1:
+        all_members = [p for _, m in merged for p in m]
+        b_top = merged[-1][0]
+        if cost(all_members, b_top) <= collapse_slack * sum(
+                cost(m, b) for b, m in merged):
+            merged = [(b_top, all_members)]
+
     return [BucketPlan(b_bucket=b,
                        c_bucket=next_geometric(len(m), align),
                        members=tuple(sorted(m)))
@@ -288,7 +319,8 @@ def build_bucketed_cohort(x: np.ndarray, y: np.ndarray,
                           pools: Sequence[np.ndarray], n_steps: int,
                           rng: np.random.Generator, max_batch: int = 64,
                           batch_align: int = 32,
-                          client_align: int = 4
+                          client_align: int = 4,
+                          client_multiple: int = 1
                           ) -> "BucketedCohort | None":
     """Gather heterogeneous pools into width-aligned sub-cohorts.
 
@@ -297,7 +329,9 @@ def build_bucketed_cohort(x: np.ndarray, y: np.ndarray,
     batch width via :func:`plan_buckets` — so the union of the buckets
     holds the same samples as the global-``Bmax`` cohort while the
     padded-element count stays within a constant factor of the real
-    element count regardless of pool skew.
+    element count regardless of pool skew.  ``client_multiple`` is
+    forwarded to the planner so every bucket's client axis divides
+    evenly across that many mesh shards.
     """
     per_client, sizes = _draw_client_batches(x, y, pools, n_steps, rng,
                                              max_batch)
@@ -305,7 +339,8 @@ def build_bucketed_cohort(x: np.ndarray, y: np.ndarray,
         return None
     widths = [bx.shape[1] for bx, _ in per_client]
     plans = plan_buckets(widths, batch_align=batch_align,
-                         client_align=client_align)
+                         client_align=client_align,
+                         client_multiple=client_multiple)
     sample_shape = x.shape[1:]
     buckets = []
     for plan in plans:

@@ -199,6 +199,26 @@ def hierarchical_weighted_psum(local_params, lam, axis_names):
     return jax.tree_util.tree_map(agg, local_params)
 
 
+def shard_weighted_aggregate(stacked_params, weights, axis_names=("data",)):
+    """In-mesh eq. (13) over a SHARD of stacked client params.
+
+    Call inside ``shard_map``: ``stacked_params`` is this shard's slice
+    of the bucket's client-stacked pytree (leading axis ``C_shard``) and
+    ``weights`` its slice of the GLOBALLY normalized client weights
+    (padding clients carry weight 0, so the full-axis weights sum to 1).
+    Each shard reduces its clients through the stacked ``fedavg_agg``
+    path (Pallas kernel on TPU), then the partial sums combine across
+    ``axis_names`` via :func:`hierarchical_weighted_psum` — no host
+    round-trip between the local update and the aggregate.
+    """
+    from repro.kernels.fedavg_agg import ops as agg_ops
+
+    local = jax.tree_util.tree_map(
+        lambda leaf: agg_ops.weighted_aggregate(leaf, weights),
+        stacked_params)
+    return hierarchical_weighted_psum(local, jnp.float32(1.0), axis_names)
+
+
 def aggregation_weights(ground_sizes: Sequence[int],
                         air_sizes: Sequence[int],
                         sat_size: int) -> jnp.ndarray:

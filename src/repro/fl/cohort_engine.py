@@ -34,10 +34,27 @@ Donation contract: with ``donate=True`` (default on non-CPU backends)
 replace their reference with the returned params and must not hand the
 same buffer to two consumers (``RegionTrainer`` keeps a private device
 copy for exactly this reason).
+
+Mesh-sharded mode (``sharding="mesh"``, or ``"auto"`` with more than
+one visible device) additionally shards every bucket's CLIENT axis over
+the mesh's ``data`` axis: the planner pads client counts to multiples
+of the shard count (:func:`repro.data.pipeline.plan_buckets`'s
+``client_multiple``), each occupied bucket dispatches through
+``shard_map`` (version-stable ``repro.compat.shard_map``) running the
+per-shard local updates, and the shards' partial eq.-(13) sums combine
+in-mesh via :func:`repro.fl.aggregation.shard_weighted_aggregate`
+(stacked ``fedavg_agg`` + ``psum``) — parameters still never round-trip
+through the host between local update and aggregate.  Bucket signatures
+extend with the shard count (signature ⊕ mesh shape) so the
+``no_recompile`` guard covers the sharded path too.  On a 1-device mesh
+the engine degrades to the exact single-device code path — bit-identical
+to ``sharding="off"`` by construction (golden-locked in
+``tests/test_mesh_cohort.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -48,8 +65,17 @@ import numpy as np
 from repro.analysis import contracts
 from repro.data.pipeline import BucketedCohort, build_bucketed_cohort
 
-from .aggregation import fedavg_stacked_multi
+from .aggregation import fedavg_stacked_multi, shard_weighted_aggregate
 from .client import cohort_local_update, cohort_round_step_donated
+
+SHARDING_MODES = ("auto", "mesh", "off")
+
+
+@jax.jit
+def _tree_sum(parts):
+    """Sum a tuple of per-bucket partial-aggregate pytrees leaf-wise."""
+    return jax.tree_util.tree_map(
+        lambda *leaves: functools.reduce(jnp.add, leaves), *parts)
 
 
 @dataclasses.dataclass
@@ -60,6 +86,11 @@ class CohortEngineStats:
     compiled_signatures: int = 0   # distinct bucket shapes seen so far
     real_elements: int = 0         # batch elements actually drawn
     layout_elements: int = 0       # batch elements the padded layout ran
+    # mesh-sharded path only (all zero / 1.0 on a 1-shard engine):
+    sharded_dispatches: int = 0    # bucket dispatches through shard_map
+    shard_pad_clients: int = 0     # padding client slots in sharded layouts
+    last_shard_imbalance: float = 1.0  # max/mean real elements per shard
+    max_shard_imbalance: float = 1.0   # worst round so far
 
     @property
     def padding_ratio(self) -> float:
@@ -80,8 +111,10 @@ class CohortEngine:
 
     def __init__(self, apply_fn: Callable, batch_align: int = 32,
                  client_align: int = 4, donate: Optional[bool] = None,
-                 guard: bool = False, tracer=None):
+                 guard: bool = False, tracer=None, mesh=None,
+                 sharding: str = "auto"):
         from repro.obs import NULL_TRACER
+        from repro.sharding.specs import data_axis_size
         self.apply_fn = apply_fn
         # repro.obs tracer (RegionTrainer shares its own); the disabled
         # default costs one branch per round + one per bucket dispatch
@@ -96,6 +129,28 @@ class CohortEngine:
         # executed before runs under contracts.no_recompile(): a lowering
         # on a warm signature raises instead of silently re-tracing
         self.guard = bool(guard)
+        # client-axis mesh sharding: "off" never shards, "mesh" shards
+        # over the given (or default) mesh's data axis, "auto" shards
+        # only when more than one device is visible
+        if sharding not in SHARDING_MODES:
+            raise ValueError(f"sharding={sharding!r} not in "
+                             f"{SHARDING_MODES}")
+        self.sharding = sharding
+        if sharding == "off":
+            mesh = None
+        elif mesh is None and (sharding == "mesh"
+                               or len(jax.devices()) > 1):
+            from repro.launch.mesh import make_cohort_mesh
+            mesh = make_cohort_mesh()
+        if mesh is not None and data_axis_size(mesh) < 1:
+            raise ValueError(f"mesh {mesh} has no usable 'data' axis")
+        self.mesh = mesh
+        # number of client-axis shards each bucket dispatch splits into;
+        # 1 (including any 1-device mesh) routes through the exact
+        # single-device code path — the bit-identical degrade contract
+        self.shards = data_axis_size(mesh)
+        self._sharded_step = (self._make_sharded_step()
+                              if self.shards > 1 else None)
         self.signatures: set = set()
         self.round_signatures: set = set()
         self.stats = CohortEngineStats()
@@ -105,24 +160,53 @@ class CohortEngine:
               pools: Sequence[np.ndarray], n_steps: int,
               rng: np.random.Generator, max_batch: int
               ) -> Optional[BucketedCohort]:
-        """Plan + materialize this round's bucketed cohort (host side)."""
+        """Plan + materialize this round's bucketed cohort (host side).
+
+        On a sharded engine the planner additionally pads every bucket's
+        client axis to a multiple of the shard count so ``shard_map``
+        splits it without a remainder shard."""
         return build_bucketed_cohort(x, y, pools, n_steps, rng,
                                      max_batch=max_batch,
                                      batch_align=self.batch_align,
-                                     client_align=self.client_align)
+                                     client_align=self.client_align,
+                                     client_multiple=self.shards)
 
     # -- execution ----------------------------------------------------------
+    def _bucket_signature(self, cb) -> tuple:
+        """Shard-stable compilation key for one bucket dispatch: the
+        bucket's shape/dtype ⊕ the mesh shape (shard count).  The same
+        bucket layout compiles separately per mesh, so both must key the
+        signature cache."""
+        return cb.xs.shape + (str(cb.xs.dtype), self.shards)
+
     def _round_signature(self, cohort: BucketedCohort) -> tuple:
         """Everything jax's jit caches key on for one round of this
         engine: the per-bucket shapes/dtypes (local-update dispatches)
-        plus the donate flag (selects the fused vs. split program)."""
-        return (tuple(cb.xs.shape + (str(cb.xs.dtype),)
-                      for cb in cohort.buckets), self.donate)
+        plus the donate flag (selects the fused vs. split program) and
+        the shard count (selects the sharded vs. single-device program).
+        """
+        return (tuple(self._bucket_signature(cb) for cb in cohort.buckets),
+                self.donate)
+
+    def _shard_real_elements(self, cohort: BucketedCohort) -> np.ndarray:
+        """Real (unmasked) batch elements each shard executes this round.
+
+        ``shard_map`` splits every bucket's client axis into
+        ``self.shards`` contiguous blocks; padding clients sit at the
+        tail, so the trailing shards run the masked slack.
+        """
+        per = np.zeros(self.shards, dtype=np.int64)
+        for cb in cohort.buckets:
+            c = cb.mask.shape[0]
+            per_client = cb.mask.reshape(c, -1).sum(axis=1)
+            per += per_client.reshape(self.shards,
+                                      c // self.shards).sum(axis=1).astype(
+                                          np.int64)
+        return per
 
     def _record(self, cohort: BucketedCohort):
         for cb in cohort.buckets:
-            sig = cb.xs.shape + (str(cb.xs.dtype),)
-            self.signatures.add(sig)
+            self.signatures.add(self._bucket_signature(cb))
         self.round_signatures.add(self._round_signature(cohort))
         st = self.stats
         st.rounds += 1
@@ -130,6 +214,21 @@ class CohortEngine:
         st.compiled_signatures = len(self.signatures)
         st.real_elements += cohort.real_elements
         st.layout_elements += cohort.layout_elements
+        if self.shards > 1:
+            st.sharded_dispatches += len(cohort.buckets)
+            st.shard_pad_clients += sum(
+                cb.xs.shape[0] - len(plan.members)
+                for cb, plan in zip(cohort.buckets, cohort.plans))
+            per = self._shard_real_elements(cohort)
+            imb = (float(per.max() * self.shards / per.sum())
+                   if per.sum() else 1.0)
+            st.last_shard_imbalance = imb
+            st.max_shard_imbalance = max(st.max_shard_imbalance, imb)
+            if self.tracer.enabled:
+                self.tracer.metrics.histogram(
+                    "cohort.shard_imbalance").observe(imb)
+                self.tracer.metrics.gauge(
+                    "cohort.shard_pad_clients").set(st.shard_pad_clients)
 
     def round(self, params, cohort: BucketedCohort, lr: float,
               total: int) -> Tuple[object, List[float]]:
@@ -150,7 +249,7 @@ class CohortEngine:
             # recompiles = bucket shapes not yet in the signature cache
             # (the PR-6 no_recompile contract's counter, as a metric)
             fresh = sum(1 for cb in cohort.buckets
-                        if cb.xs.shape + (str(cb.xs.dtype),)
+                        if self._bucket_signature(cb)
                         not in self.signatures)
             m = tr.metrics
             m.counter("cohort.recompiled_signatures").inc(fresh)
@@ -163,10 +262,12 @@ class CohortEngine:
         if tr.enabled:
             tr.metrics.gauge("cohort.padding_ratio").set(
                 self.stats.padding_ratio)
+        execute = (self._execute_sharded if self.shards > 1
+                   else self._execute)
         if warm:
             with contracts.no_recompile(label="CohortEngine.round"):
-                return self._execute(params, cohort, lr, total)
-        return self._execute(params, cohort, lr, total)
+                return execute(params, cohort, lr, total)
+        return execute(params, cohort, lr, total)
 
     def _trace_dispatch(self, cb, result, t0: float):
         """Emit one ``bucket_dispatch`` span (enabled tracer only).
@@ -181,22 +282,36 @@ class CohortEngine:
         if tr.device_timing:
             jax.block_until_ready(result)
         c, h, b = cb.xs.shape[0], cb.xs.shape[1], cb.xs.shape[2]
+        attrs = dict(clients=c, batch_width=b,
+                     real=int(np.count_nonzero(cb.mask)),
+                     layout=int(cb.mask.size),
+                     mesh_shape=[self.shards])
+        if self.shards > 1:
+            # per-shard real elements of THIS bucket: shard i runs
+            # clients [i*c/n, (i+1)*c/n) — the report's per-shard
+            # dispatch-time breakdown apportions dur_wall by these
+            per_client = cb.mask.reshape(c, -1).sum(axis=1)
+            attrs["shard_real"] = [
+                int(v) for v in per_client.reshape(
+                    self.shards, c // self.shards).sum(axis=1)]
         tr.span("bucket_dispatch", f"C{c}xH{h}xB{b}",
-                dur_wall=time.perf_counter() - t0,
-                clients=c, batch_width=b,
-                real=int(np.count_nonzero(cb.mask)),
-                layout=int(cb.mask.size))
+                dur_wall=time.perf_counter() - t0, **attrs)
         tr.metrics.histogram("cohort.dispatch_wall_s").observe(
             time.perf_counter() - t0)
 
     def _execute(self, params, cohort: BucketedCohort, lr: float,
                  total: int) -> Tuple[object, List[float]]:
-        lr = jnp.float32(lr)
+        # host numpy tensors and scalars go into the jitted steps as-is:
+        # jit commits them through the C++ shard_args path, which is one
+        # copy and no python dispatch — an explicit jnp.asarray per
+        # tensor costs ~70us of pure overhead per call at small C (and
+        # produces the very same committed f32 buffers)
+        lr = np.float32(lr)
         trace = self.tracer.enabled
         # eq.-(13) weights over the concatenated client axis, bucket
         # order; padding clients hold size 0 and therefore weight 0
         w = np.concatenate([cb.sizes for cb in cohort.buckets])
-        weights = jnp.asarray(w / max(1, total), jnp.float32)
+        weights = (w / max(1, total)).astype(np.float32)
 
         if len(cohort.buckets) == 1 and self.donate:
             # fused fast path: local update + aggregate in ONE dispatch
@@ -207,8 +322,7 @@ class CohortEngine:
             cb = cohort.buckets[0]
             t0 = time.perf_counter() if trace else 0.0
             new_params, losses = cohort_round_step_donated(
-                self.apply_fn, params, jnp.asarray(cb.xs),
-                jnp.asarray(cb.ys), jnp.asarray(cb.mask), weights, lr)
+                self.apply_fn, params, cb.xs, cb.ys, cb.mask, weights, lr)
             if trace:
                 self._trace_dispatch(cb, (new_params, losses), t0)
             loss_parts = [losses]
@@ -217,8 +331,7 @@ class CohortEngine:
             for cb in cohort.buckets:
                 t0 = time.perf_counter() if trace else 0.0
                 stacked, losses = cohort_local_update(
-                    self.apply_fn, params, jnp.asarray(cb.xs),
-                    jnp.asarray(cb.ys), jnp.asarray(cb.mask), lr)
+                    self.apply_fn, params, cb.xs, cb.ys, cb.mask, lr)
                 if trace:
                     self._trace_dispatch(cb, (stacked, losses), t0)
                 stacked_parts.append(stacked)
@@ -226,8 +339,92 @@ class CohortEngine:
             new_params = fedavg_stacked_multi(stacked_parts, weights,
                                               donate=self.donate)
 
+        return new_params, self._scatter_losses(cohort, loss_parts)
+
+    # -- mesh-sharded execution ---------------------------------------------
+    def _make_sharded_step(self):
+        """Compile-once factory for the sharded bucket dispatch: a jitted
+        ``shard_map`` program running the per-shard local updates and the
+        in-mesh eq.-(13) partial aggregate — one program per bucket
+        signature ⊕ mesh shape (jax's jit cache keys the shapes).
+
+        The jit carries explicit ``in_shardings`` so the host numpy
+        bucket tensors are committed straight into their mesh layout by
+        the call itself (no staging ``device_put`` round-trip), and
+        donates them — they are rebuilt from the drifted pools every
+        round, so XLA may reuse their buffers for the program's
+        temporaries instead of allocating a second bucket-sized
+        working set.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.sharding.specs import cohort_step_specs
+        apply_fn = self.apply_fn
+        in_specs, out_specs = cohort_step_specs()
+        repl = NamedSharding(self.mesh, P())
+        split = NamedSharding(self.mesh, P("data"))
+
+        def bucket_step(params, xs, ys, mask, weights, lr):
+            # per-shard slice of the bucket: local updates over this
+            # shard's clients, then the shard's weighted partial sum
+            # combined across the data axis — no host round-trip
+            stacked, losses = cohort_local_update(apply_fn, params, xs,
+                                                  ys, mask, lr)
+            part = shard_weighted_aggregate(stacked, weights,
+                                            axis_names=("data",))
+            return part, losses
+
+        return jax.jit(
+            shard_map(bucket_step, mesh=self.mesh, in_specs=in_specs,
+                      out_specs=out_specs),
+            in_shardings=(repl, split, split, split, split, repl),
+            donate_argnums=(1, 2, 3, 4))
+
+    def _execute_sharded(self, params, cohort: BucketedCohort, lr: float,
+                         total: int) -> Tuple[object, List[float]]:
+        """Dispatch every bucket through the sharded step.
+
+        Weights are GLOBALLY normalized on the host (padding clients
+        carry weight 0), so each bucket's shard_map call returns that
+        bucket's partial eq.-(13) sum; multi-bucket rounds combine the
+        partials with one extra leaf-wise add.  The model stays
+        replicated across the mesh between rounds — only the first
+        round (or an externally installed model) pays the broadcast.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        trace = self.tracer.enabled
+        lr = jnp.float32(lr)
+        repl = NamedSharding(self.mesh, P())
+        params = jax.device_put(params, repl)
+        w = np.concatenate([cb.sizes for cb in cohort.buckets])
+        w = w.astype(np.float64)
+        weights = (w / max(1.0, w.sum())).astype(np.float32)
+
+        parts, loss_parts = [], []
+        off = 0
+        for cb in cohort.buckets:
+            c = cb.xs.shape[0]
+            wb = weights[off:off + c]
+            off += c
+            t0 = time.perf_counter() if trace else 0.0
+            # host numpy tensors go in directly: the step's in_shardings
+            # commit them onto the mesh, and the buffers are donated
+            part, losses = self._sharded_step(
+                params, cb.xs, cb.ys, cb.mask, wb, lr)
+            if trace:
+                self._trace_dispatch(cb, (part, losses), t0)
+            parts.append(part)
+            loss_parts.append(losses)
+        new_params = parts[0] if len(parts) == 1 else _tree_sum(
+            tuple(parts))
+        return new_params, self._scatter_losses(cohort, loss_parts)
+
+    @staticmethod
+    def _scatter_losses(cohort: BucketedCohort,
+                        loss_parts: List) -> List[float]:
+        """Map per-bucket loss vectors back to canonical client order."""
         out = np.zeros(cohort.n_clients, dtype=np.float64)
         for plan, losses in zip(cohort.plans, loss_parts):
             vals = np.asarray(losses)[:len(plan.members)]
             out[list(plan.members)] = vals
-        return new_params, [float(v) for v in out]
+        return [float(v) for v in out]

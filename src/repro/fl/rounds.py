@@ -42,7 +42,10 @@ Execution modes (``FLConfig.execution``):
   zero after warm-up; padded FLOPs stay within a constant factor of
   real FLOPs at ANY pool skew (the PR-1 global-``Bmax`` layout, kept as
   ``cohort_bucketing="global"`` for comparison, degrades with skew
-  instead).
+  instead).  With more than one visible device (or
+  ``cohort_sharding="mesh"``) each bucket's client axis additionally
+  shards over the mesh's ``data`` axis through ``shard_map`` with
+  in-mesh psum aggregation — see the cohort-engine module docstring.
 * ``"sequential"`` — the reference loop: one ``local_update`` dispatch
   per node, host-side ``fedavg`` over a model list.
 * ``"auto"`` (default) — ``"batched"`` on accelerator backends where the
@@ -106,6 +109,11 @@ class FLConfig:
     # bucket layout is already warm — a recompile on a seen signature
     # raises ContractViolation instead of silently re-tracing each round
     guard_recompiles: bool = False
+    # batched mode: shard each bucket's client axis over the device
+    # mesh's "data" axis ("mesh"), never shard ("off"), or shard exactly
+    # when more than one device is visible ("auto", the default — a
+    # single-device host keeps the bit-identical legacy path)
+    cohort_sharding: str = "auto"  # auto|mesh|off
     # Cross-region federation override for SAGINEngine FL mode: a
     # FederationConfig replaces the scenario's wholesale; a bare policy
     # name (e.g. "soft_async") keeps the scenario's cadence/topology/
@@ -290,7 +298,8 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
         from .cohort_engine import CohortEngine
         engine = CohortEngine(apply_fn, batch_align=cfg.cohort_batch_align,
                               client_align=cfg.cohort_client_align,
-                              guard=cfg.guard_recompiles)
+                              guard=cfg.guard_recompiles,
+                              sharding=cfg.cohort_sharding)
     cohort = engine.build(ds.x_train, ds.y_train, node_pools, cfg.h_local,
                           rng, max_batch=cfg.batch_cap)
     if cohort is None:
@@ -393,7 +402,8 @@ class RegionTrainer:
             self.cohort_engine = CohortEngine(
                 self.apply_fn, batch_align=cfg.cohort_batch_align,
                 client_align=cfg.cohort_client_align,
-                guard=cfg.guard_recompiles, tracer=self.tracer)
+                guard=cfg.guard_recompiles, tracer=self.tracer,
+                sharding=cfg.cohort_sharding)
 
         self.result = FLResult(cfg, [], [], [], [], [], [])
         eval_idx = self.rng.choice(len(self.ds.x_test),

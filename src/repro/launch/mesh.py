@@ -14,8 +14,8 @@ import jax
 from repro.compat import shard_map  # noqa: F401  (version-stable re-export
 #                                    for mesh programs; see repro.compat)
 
-__all__ = ["make_production_mesh", "make_host_mesh", "shard_map",
-           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_cohort_mesh",
+           "shard_map", "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,6 +27,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU smoke tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_cohort_mesh(n_devices=None):
+    """1-D ``("data",)`` mesh over the visible devices — the client-axis
+    sharding domain of the mesh-sharded :class:`~repro.fl.cohort_engine.
+    CohortEngine`.  ``n_devices`` caps the mesh to a leading subset of
+    ``jax.devices()`` (forced-host-device CI sweeps use 1/2/4/8)."""
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"n_devices={n} not in [1, {len(devices)}]")
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])
 
 
 # TPU v5e hardware constants for the roofline model (per chip)

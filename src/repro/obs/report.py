@@ -11,7 +11,14 @@ renders what the paper's latency story needs to be debuggable:
   and **idle** (barrier parking / event-loop gaps to the run's end);
 * top-k anomalies: straggler rounds (≥ :data:`STRAGGLER_FACTOR` × the
   region's median), repeated-handover rounds (≥2 switches), and
-  quorum-miss or skipped merges.
+  quorum-miss or skipped merges;
+* a sharded-dispatch breakdown when the trace holds
+  ``bucket_dispatch`` spans from a mesh-sharded
+  :class:`~repro.fl.cohort_engine.CohortEngine` (``mesh_shape`` and
+  per-shard ``shard_real`` attrs): each span's host ``dur_wall`` is
+  apportioned across shards by their share of the bucket's real
+  (unmasked) batch elements, giving per-shard dispatch time, work
+  share, and the aggregate imbalance (max over mean share).
 
 Everything here is pure span arithmetic — no jax, no simulator
 imports — so the CLI (``python -m repro.obs report``) stays fast and
@@ -52,12 +59,29 @@ class RegionReport:
 
 
 @dataclasses.dataclass
+class ShardRow:
+    shard: int
+    real_elements: int = 0       # unmasked batch elements this shard ran
+    wall_s: float = 0.0          # dispatch dur_wall apportioned by share
+
+
+@dataclasses.dataclass
+class ShardDispatchReport:
+    mesh_shape: List[int]
+    dispatches: int              # sharded bucket_dispatch spans seen
+    wall_s: float                # total sharded dispatch wall time
+    shards: List[ShardRow]
+    imbalance: float = 1.0       # max shard share / mean shard share
+
+
+@dataclasses.dataclass
 class TraceReport:
     regions: List[RegionReport]
     merges: int
     anomalies: List[Anomaly]
     n_spans: int
     kinds: Dict[str, int]
+    shard_dispatch: Optional[ShardDispatchReport] = None
 
 
 def _median(vals: Sequence[float]) -> float:
@@ -67,6 +91,41 @@ def _median(vals: Sequence[float]) -> float:
     n = len(s)
     mid = n // 2
     return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def _shard_dispatch(spans: Sequence[Span]) -> Optional[ShardDispatchReport]:
+    """Fold sharded ``bucket_dispatch`` spans into per-shard totals.
+
+    A span is sharded when it carries a ``shard_real`` list (emitted
+    only by engines with >1 shard).  Each span's ``dur_wall`` is split
+    across shards proportionally to the shard's real-element share of
+    that bucket — shard_map runs all shards in lockstep, so this is
+    the *useful* time attribution, not a measured per-shard clock.
+    """
+    sharded = [s for s in spans
+               if s.kind == "bucket_dispatch" and s.attrs.get("shard_real")]
+    if not sharded:
+        return None
+    n = max(len(s.attrs["shard_real"]) for s in sharded)
+    rows = [ShardRow(shard=i) for i in range(n)]
+    wall = 0.0
+    mesh_shape = [n]
+    for s in sharded:
+        per = [float(v) for v in s.attrs["shard_real"]]
+        tot = sum(per) or 1.0
+        ms = s.attrs.get("mesh_shape")
+        if isinstance(ms, list) and ms:
+            mesh_shape = [int(v) for v in ms]
+        wall += s.dur_wall
+        for i, v in enumerate(per):
+            rows[i].real_elements += int(v)
+            rows[i].wall_s += s.dur_wall * v / tot
+    total_real = sum(r.real_elements for r in rows)
+    imb = (max(r.real_elements for r in rows) * n / total_real
+           if total_real else 1.0)
+    return ShardDispatchReport(mesh_shape=mesh_shape,
+                               dispatches=len(sharded), wall_s=wall,
+                               shards=rows, imbalance=imb)
 
 
 def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
@@ -155,7 +214,7 @@ def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
     anomalies.sort(key=lambda a: -a.severity)
     return TraceReport(regions=regions, merges=len(merges),
                        anomalies=anomalies[:top], n_spans=len(spans),
-                       kinds=kinds)
+                       kinds=kinds, shard_dispatch=_shard_dispatch(spans))
 
 
 def _table(headers: List[str], rows: List[List[str]]) -> str:
@@ -198,6 +257,19 @@ def render(report: TraceReport) -> str:
                      f"{r.idle:.1f} ({pct(r.idle)})"])
     out.append(_table(["region", "compute", "uplink", "isl", "idle"], rows))
     out.append("")
+    sd = report.shard_dispatch
+    if sd is not None:
+        out.append(f"sharded dispatch (mesh {'x'.join(map(str, sd.mesh_shape))}, "
+                   f"{sd.dispatches} dispatch(es), "
+                   f"{1e3 * sd.wall_s:.1f} ms total, "
+                   f"imbalance {sd.imbalance:.2f}x)")
+        total_real = sum(r.real_elements for r in sd.shards) or 1
+        rows = [[str(r.shard), str(r.real_elements),
+                 f"{100 * r.real_elements / total_real:.0f}%",
+                 f"{1e3 * r.wall_s:.1f}"]
+                for r in sd.shards]
+        out.append(_table(["shard", "real_elems", "share", "wall_ms"], rows))
+        out.append("")
     if report.anomalies:
         out.append(f"top anomalies ({len(report.anomalies)})")
         for a in report.anomalies:

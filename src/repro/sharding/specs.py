@@ -133,6 +133,31 @@ def batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+# ---------------------------------------------------------------------------
+# Cohort client-axis sharding (the FL mega-constellation mapping) ------------
+# ---------------------------------------------------------------------------
+def data_axis_size(mesh) -> int:
+    """Size of the mesh's ``data`` axis (1 when absent) — the number of
+    client-axis shards the cohort engine dispatches across."""
+    if mesh is None:
+        return 1
+    return int(dict(getattr(mesh, "shape", {})).get("data", 1))
+
+
+def cohort_step_specs():
+    """``shard_map`` specs for one bucket dispatch of the mesh-sharded
+    cohort engine: ``(in_specs, out_specs)``.
+
+    Inputs  ``(params, xs, ys, mask, weights, lr)``: the model replicates
+    while every client-stacked tensor (and the per-client aggregation
+    weights) shards its leading client axis over ``data``.  Outputs
+    ``(new_params, losses)``: the psum-reduced model is replicated, the
+    per-client losses stay client-sharded.
+    """
+    client = P("data")
+    return (P(), client, client, client, client, P()), (P(), client)
+
+
 def data_pspec(cfg: ModelConfig, shape: InputShape, multi_pod: bool,
                which: str = "inputs"):
     """Sharding for a batch input: batch dim over (pod, data)."""

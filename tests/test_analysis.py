@@ -451,6 +451,94 @@ def test_obs001_negative_unrelated_receiver_methods(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# SHARD001 — collective with literal axis outside shard_map context
+# ---------------------------------------------------------------------------
+def test_shard001_positive_unwired_function(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        def agg(x):
+            return jax.lax.psum(x, "data")
+    """)
+    assert rules_hit(out) == ["SHARD001"]
+    assert out[0].line == 5
+
+
+def test_shard001_positive_pmean_tuple_axes_and_kwarg(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        from jax import lax
+
+        def a(x):
+            return lax.pmean(x, ("data", "pod"))
+
+        def b(x):
+            return jax.lax.all_gather(x, axis_name="data")
+    """)
+    assert rules_hit(out) == ["SHARD001"]
+    assert len(out) == 2
+
+
+def test_shard001_negative_wired_by_name(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+
+        def agg(x):
+            return jax.lax.psum(x, "data")
+
+        def build(mesh):
+            return jax.jit(shard_map(agg, mesh=mesh, in_specs=P("data"),
+                                     out_specs=P()))
+    """)
+    assert out == []
+
+
+def test_shard001_negative_closure_factory(tmp_path):
+    # the CohortEngine._make_sharded_step idiom: the traced body is a
+    # nested def inside the function that calls shard_map
+    out = lint(tmp_path, """
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+
+        def make_step(mesh):
+            def body(x):
+                return jax.lax.psum(x, "data")
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
+                                     out_specs=P()))
+    """)
+    assert out == []
+
+
+def test_shard001_negative_axis_from_parameter(tmp_path):
+    # hierarchical_weighted_psum takes the axes as a parameter — the
+    # binding mesh lives in the caller's module, out of static reach
+    out = lint(tmp_path, """
+        import jax
+
+        def weighted_psum(tree, lam, axis_names):
+            def agg(leaf):
+                contrib = lam * leaf
+                for ax in axis_names:
+                    contrib = jax.lax.psum(contrib, ax)
+                return contrib
+            return jax.tree_util.tree_map(agg, tree)
+    """)
+    assert out == []
+
+
+def test_shard001_skipped_in_tests(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        def agg(x):
+            return jax.lax.psum(x, "data")
+    """, name="tests/test_x.py")
+    assert out == []
+
+
+# ---------------------------------------------------------------------------
 # golden findings, clean file, parse errors
 # ---------------------------------------------------------------------------
 def test_golden_file_line_rule_triples(tmp_path):

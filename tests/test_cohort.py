@@ -183,11 +183,39 @@ def test_plan_buckets_geometry():
     assert [p.c_bucket for p in plans] == [4, 4]
     many = plan_buckets([4] * 11, batch_align=8, client_align=4)
     assert many[0].c_bucket == 16
-    # a merge-hostile slack keeps the pure geometric partition
+    # a merge-hostile slack keeps the pure geometric partition (collapse
+    # disabled too — both knobs off mean the untouched geometric plan)
     pure = plan_buckets([3, 8, 9, 64, 5], batch_align=8, client_align=4,
-                        merge_slack=0.5)
+                        merge_slack=0.5, collapse_slack=0.0)
     assert [p.b_bucket for p in pure] == [8, 16, 64]
     assert [p.members for p in pure] == [(0, 1, 4), (2,), (3,)]
+
+
+def test_plan_buckets_collapse_and_shard_multiple():
+    # small-cohort collapse: near-uniform widths whose multi-bucket plan
+    # saves little padding fold into ONE dispatch (the dispatch-bound
+    # C=16 regime of BENCH_cohort.json)
+    small = plan_buckets([6, 8, 10, 12, 9, 14, 7, 11], batch_align=8,
+                         client_align=4)
+    assert len(small) == 1
+    assert small[0].b_bucket == 16
+    assert small[0].members == tuple(range(8))
+    # ... but a heavy-skew plan stays split: collapsing would multiply
+    # the padding far beyond collapse_slack
+    skew = plan_buckets([8] * 12 + [512], batch_align=8, client_align=4)
+    assert len(skew) > 1
+    # shard-aware mode: every client count divides across the mesh's
+    # data axis, on a grid that is still geometric (drift-stable)
+    for shards in (1, 2, 4, 8):
+        plans = plan_buckets([8] * 12 + [512], batch_align=8,
+                             client_align=4, client_multiple=shards)
+        for p in plans:
+            assert p.c_bucket % shards == 0
+            assert p.c_bucket >= len(p.members)
+    # lcm grid: client_align=4 with 8 shards quantizes to 8 * 2^k
+    plans = plan_buckets([8, 8, 8], batch_align=8, client_align=4,
+                         client_multiple=8)
+    assert plans[0].c_bucket == 8
 
 
 def test_bucketed_cohort_matches_sequential_rng_stream():
@@ -225,8 +253,9 @@ def test_cohort_engine_round_matches_sequential_loop():
     x, y = _toy_data(n=1200, seed=3)
     h, lr = 3, 0.1
     # enough narrow clients that coalescing them into the 10x pool's
-    # bucket would multiply the padding -> genuinely multi-bucket
-    pools = [np.arange(k * 30, (k + 1) * 30) for k in range(6)]
+    # bucket (or collapsing the whole plan into one) would multiply the
+    # padding -> genuinely multi-bucket
+    pools = [np.arange(k * 30, (k + 1) * 30) for k in range(12)]
     pools.append(np.arange(200, 1100))
     total = sum(len(p) for p in pools)
     params = _mlp_init(jax.random.PRNGKey(0))

@@ -1,0 +1,298 @@
+"""Mesh-sharded cohort engine (client axis over the mesh's data axis).
+
+Three layers of coverage:
+
+* Host-only planner checks plus the 1-device-mesh golden lock (the
+  sharded engine must be BIT-identical to ``sharding="off"`` there) —
+  these run on any device count, including the plain tier-1 lane.
+* In-process multi-device tests, marked ``mesh`` and skipped below 2
+  devices: the CI mesh lane runs the whole file (plus
+  ``tests/test_cohort.py``) under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to activate
+  them, asserting sharded == single-device trajectories at equal seeds
+  and ZERO recompiles on warm shard-stable signatures.
+* One subprocess test (marked ``slow``) that forces 8 host devices
+  itself, so the ordinary slow lane exercises the sharded path even
+  without the forced-device environment.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import ContractViolation
+from repro.data.pipeline import plan_buckets
+from repro.fl.cohort_engine import CohortEngine
+from repro.launch.mesh import make_cohort_mesh
+from repro.obs import ObsConfig, Tracer
+
+N_DEVICES = len(jax.devices())
+
+multi_device = pytest.mark.skipif(
+    N_DEVICES < 2,
+    reason="needs >=2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mlp_init(key, din=32, dh=16, nc=10):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (din, dh)) * 0.1,
+            "b1": jnp.zeros((dh,)),
+            "w2": jax.random.normal(k2, (dh, nc)) * 0.1,
+            "b2": jnp.zeros((nc,))}
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _toy_data(n=600, din=32, nc=10, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    y = rng.integers(0, nc, size=n)
+    return x, y
+
+
+def _skewed_pools(n, k_small=10, small=30, seed=0):
+    pools = [np.arange(k * small, (k + 1) * small) for k in range(k_small)]
+    pools.append(np.arange(k_small * small, n))
+    return pools
+
+
+# ---------------------------------------------------------------------------
+# planner + degrade contract: any device count
+# ---------------------------------------------------------------------------
+def test_engine_modes_and_validation():
+    with pytest.raises(ValueError):
+        CohortEngine(_mlp_apply, sharding="bogus")
+    off = CohortEngine(_mlp_apply, sharding="off")
+    assert off.shards == 1 and off.mesh is None
+    one = CohortEngine(_mlp_apply, sharding="mesh",
+                       mesh=make_cohort_mesh(1))
+    assert one.shards == 1
+
+
+def test_sharded_plan_divides_across_shards():
+    for shards in (2, 4, 8):
+        plans = plan_buckets([8] * 12 + [512], batch_align=8,
+                             client_align=4, client_multiple=shards)
+        assert all(p.c_bucket % shards == 0 for p in plans)
+
+
+def test_one_device_mesh_bit_identical_to_off():
+    """The golden degrade lock: sharding="mesh" over a 1-device mesh IS
+    the single-device engine — identical plans, bit-identical params and
+    losses over a multi-round drifting trajectory."""
+    x, y = _toy_data(n=900, seed=5)
+    pools = _skewed_pools(900, k_small=6, small=40)
+    total = sum(len(p) for p in pools)
+    e_off = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                         sharding="off")
+    e_one = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                         sharding="mesh", mesh=make_cohort_mesh(1))
+    p_off = _mlp_init(jax.random.PRNGKey(1))
+    p_one = _mlp_init(jax.random.PRNGKey(1))
+    for r in range(3):
+        c_off = e_off.build(x, y, pools, 3, np.random.default_rng(50 + r),
+                            max_batch=16)
+        c_one = e_one.build(x, y, pools, 3, np.random.default_rng(50 + r),
+                            max_batch=16)
+        assert [cb.xs.shape for cb in c_off.buckets] == \
+               [cb.xs.shape for cb in c_one.buckets]
+        p_off, l_off = e_off.round(p_off, c_off, 0.1, total)
+        p_one, l_one = e_one.round(p_one, c_one, 0.1, total)
+        assert l_off == l_one
+        for a, b in zip(jax.tree_util.tree_leaves(p_off),
+                        jax.tree_util.tree_leaves(p_one)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the 1-shard engine reports no sharded activity
+    assert e_one.stats.sharded_dispatches == 0
+    assert e_one.stats.last_shard_imbalance == 1.0
+
+
+# ---------------------------------------------------------------------------
+# multi-device: equivalence, recompiles, stats/obs (the CI mesh lane)
+# ---------------------------------------------------------------------------
+@multi_device
+@pytest.mark.mesh
+def test_sharded_matches_single_device_trajectory():
+    """Sharded == unsharded trajectories at equal seeds (same RNG stream,
+    same batches; only float reduction order differs across shards)."""
+    x, y = _toy_data(n=900, seed=2)
+    pools = _skewed_pools(900, k_small=8, small=30)
+    total = sum(len(p) for p in pools)
+    e_off = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                         sharding="off")
+    e_mesh = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                          sharding="mesh")
+    assert e_mesh.shards == N_DEVICES
+    p_off = _mlp_init(jax.random.PRNGKey(0))
+    p_mesh = _mlp_init(jax.random.PRNGKey(0))
+    for r in range(4):
+        c_off = e_off.build(x, y, pools, 3, np.random.default_rng(10 + r),
+                            max_batch=16)
+        c_mesh = e_mesh.build(x, y, pools, 3, np.random.default_rng(10 + r),
+                              max_batch=16)
+        assert all(cb.xs.shape[0] % e_mesh.shards == 0
+                   for cb in c_mesh.buckets)
+        p_off, l_off = e_off.round(p_off, c_off, 0.1, total)
+        p_mesh, l_mesh = e_mesh.round(p_mesh, c_mesh, 0.1, total)
+        np.testing.assert_allclose(l_mesh, l_off, rtol=1e-5, atol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(p_off),
+                        jax.tree_util.tree_leaves(p_mesh)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+    assert e_mesh.stats.sharded_dispatches == e_mesh.stats.bucket_dispatches
+    assert e_mesh.stats.max_shard_imbalance >= 1.0
+
+
+@multi_device
+@pytest.mark.mesh
+def test_sharded_zero_recompiles_after_warmup():
+    """Pool drift re-lands on warm shard-stable signatures: after the
+    warm-up rounds, guarded rounds must not lower a single program."""
+    x, y = _toy_data(n=1200, seed=4)
+    pools = _skewed_pools(1200, k_small=10, small=40)
+    total = sum(len(p) for p in pools)
+    eng = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                       sharding="mesh", guard=True)
+    params = _mlp_init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(0)
+
+    def drift(pools):
+        # move ~10% of two random pools' samples to two others
+        out = [p.copy() for p in pools]
+        for _ in range(2):
+            src, dst = rng.choice(len(out), 2, replace=False)
+            k = max(1, len(out[src]) // 10)
+            out[dst] = np.concatenate([out[dst], out[src][:k]])
+            out[src] = out[src][k:]
+        return out
+
+    # warm-up: see every drifted layout once
+    warm_pools = pools
+    for r in range(3):
+        c = eng.build(x, y, warm_pools, 3, np.random.default_rng(100 + r),
+                      max_batch=16)
+        params, _ = eng.round(params, c, 0.1, total)
+        warm_pools = drift(warm_pools)
+    # warm rounds under guard: signatures already seen -> no lowering;
+    # a recompile would raise ContractViolation inside round()
+    n_sigs = len(eng.signatures)
+    warm_pools = pools
+    for r in range(3):
+        c = eng.build(x, y, warm_pools, 3, np.random.default_rng(100 + r),
+                      max_batch=16)
+        params, _ = eng.round(params, c, 0.1, total)
+        warm_pools = drift(warm_pools)
+    assert len(eng.signatures) == n_sigs
+
+
+@multi_device
+@pytest.mark.mesh
+def test_sharded_guard_self_arms_and_trips_on_cleared_cache():
+    x, y = _toy_data(n=600, seed=6)
+    pools = _skewed_pools(600, k_small=4, small=40)
+    total = sum(len(p) for p in pools)
+    eng = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                       sharding="mesh", guard=True)
+    params = _mlp_init(jax.random.PRNGKey(5))
+    c = eng.build(x, y, pools, 3, np.random.default_rng(9), max_batch=16)
+    params, _ = eng.round(params, c, 0.1, total)
+    jax.clear_caches()
+    with pytest.raises(ContractViolation):
+        eng.round(params, c, 0.1, total)
+
+
+@multi_device
+@pytest.mark.mesh
+def test_sharded_stats_spans_and_imbalance(tmp_path):
+    x, y = _toy_data(n=600, seed=7)
+    pools = _skewed_pools(600, k_small=6, small=30)
+    total = sum(len(p) for p in pools)
+    tr = Tracer(ObsConfig(path=str(tmp_path / "mesh.jsonl")))
+    eng = CohortEngine(_mlp_apply, batch_align=8, client_align=4,
+                       sharding="mesh", tracer=tr)
+    params = _mlp_init(jax.random.PRNGKey(6))
+    c = eng.build(x, y, pools, 3, np.random.default_rng(11), max_batch=16)
+    params, _ = eng.round(params, c, 0.1, total)
+
+    spans = [s for s in tr.spans if s.kind == "bucket_dispatch"]
+    assert spans
+    for s in spans:
+        assert s.attrs["mesh_shape"] == [eng.shards]
+        shard_real = s.attrs["shard_real"]
+        assert len(shard_real) == eng.shards
+        assert sum(shard_real) == s.attrs["real"]
+    # the padded tail shards run less real work -> imbalance > 1
+    assert eng.stats.last_shard_imbalance > 1.0
+    snap = tr.metrics.snapshot()
+    assert snap["cohort.shard_imbalance"]["count"] >= 1
+    assert eng.stats.shard_pad_clients > 0
+
+
+# ---------------------------------------------------------------------------
+# subprocess fallback: force 8 devices without the special environment
+# ---------------------------------------------------------------------------
+SUBPROCESS_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.fl.cohort_engine import CohortEngine
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (32, 16)) * 0.1,
+                "b1": jnp.zeros((16,)),
+                "w2": jax.random.normal(k2, (16, 10)) * 0.1,
+                "b2": jnp.zeros((10,))}
+
+    def apply_fn(p, x):
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(900, 32)).astype(np.float32)
+    y = rng.integers(0, 10, size=900)
+    pools = [np.arange(k * 30, (k + 1) * 30) for k in range(8)]
+    pools.append(np.arange(240, 900))
+    total = sum(len(p) for p in pools)
+
+    e_off = CohortEngine(apply_fn, batch_align=8, client_align=4,
+                         sharding="off")
+    e_mesh = CohortEngine(apply_fn, batch_align=8, client_align=4,
+                          sharding="mesh", guard=True)
+    assert e_mesh.shards == 8, e_mesh.shards
+    p_off, p_mesh = init(jax.random.PRNGKey(0)), init(jax.random.PRNGKey(0))
+    for r in range(4):
+        c_off = e_off.build(x, y, pools, 3, np.random.default_rng(10 + r),
+                            max_batch=16)
+        c_mesh = e_mesh.build(x, y, pools, 3, np.random.default_rng(10 + r),
+                              max_batch=16)
+        p_off, l_off = e_off.round(p_off, c_off, 0.1, total)
+        p_mesh, l_mesh = e_mesh.round(p_mesh, c_mesh, 0.1, total)
+        np.testing.assert_allclose(l_mesh, l_off, rtol=1e-5, atol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(p_off),
+                        jax.tree_util.tree_leaves(p_mesh)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+    # rounds 2..4 reused round-1 signatures (guard armed: a recompile
+    # would have raised); the signature set must have stopped growing
+    assert e_mesh.stats.rounds == 4
+    assert len(e_mesh.round_signatures) == 1
+    print("MESH_COHORT_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_cohort_subprocess_8_devices():
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_TEST],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_COHORT_OK" in r.stdout

@@ -227,6 +227,37 @@ def test_analyze_flags_stragglers_and_quorum_misses():
     assert a.isl == pytest.approx(2.0)
 
 
+def test_analyze_shard_dispatch_breakdown():
+    from repro.obs.report import render
+    spans = [
+        # unsharded dispatch: no shard_real attr, must not create the section
+        Span("bucket_dispatch", "C8xH4xB32", region="a", dur_wall=0.010,
+             attrs={"real": 100, "mesh_shape": [1]}),
+    ]
+    assert analyze(spans).shard_dispatch is None
+    spans += [
+        Span("bucket_dispatch", "C8xH4xB32", region="a", dur_wall=0.008,
+             attrs={"real": 120, "mesh_shape": [4],
+                    "shard_real": [60, 30, 20, 10]}),
+        Span("bucket_dispatch", "C16xH4xB64", region="a", dur_wall=0.012,
+             attrs={"real": 200, "mesh_shape": [4],
+                    "shard_real": [50, 50, 50, 50]}),
+    ]
+    sd = analyze(spans).shard_dispatch
+    assert sd is not None
+    assert sd.mesh_shape == [4] and sd.dispatches == 2
+    assert sd.wall_s == pytest.approx(0.020)
+    assert [r.real_elements for r in sd.shards] == [110, 80, 70, 60]
+    # dur_wall apportioned by each shard's real-element share per span
+    assert sd.shards[0].wall_s == pytest.approx(
+        0.008 * 60 / 120 + 0.012 * 50 / 200)
+    assert sum(r.wall_s for r in sd.shards) == pytest.approx(sd.wall_s)
+    assert sd.imbalance == pytest.approx(110 * 4 / 320)
+    text = render(analyze(spans))
+    assert "sharded dispatch (mesh 4" in text
+    assert "shard" in text and "wall_ms" in text
+
+
 def test_obsconfig_replace_is_frozen_dataclass():
     cfg = ObsConfig(path="x.jsonl")
     assert dataclasses.replace(cfg, device_timing=True).device_timing
