@@ -219,7 +219,7 @@ def bench_cohort(c, payload="logreg", regime="skewed", h=5, batch_cap=8,
         p = jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), params)
         for pools in schedule:
             t0 = time.perf_counter()
-            p, _ = engine(run_cfg, apply_fn, p, ds, pools, total, eng_rng)
+            p = engine(run_cfg, apply_fn, p, ds, pools, total, eng_rng)[0]
             jax.block_until_ready(p)
             times.append(time.perf_counter() - t0)
         return times

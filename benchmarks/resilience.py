@@ -1,0 +1,160 @@
+"""Resilience benchmark: chaos completion, recovery economics, and the
+degradation curve (``repro.resilience``).
+
+Three claims, two of them GATED (a failing gate fails the module, so a
+regression can never silently become a committed perf baseline):
+
+1. **Chaos completion** (gate): the engine runs the ``chaos`` scenario
+   preset — every fault kind injected against bursty Gilbert-Elliott
+   outages — to completion with a FINITE global model, and every
+   injected in-round fault recovers.
+2. **Recovered handover beats restart** (gate): for a mid-coverage
+   satellite loss, the re-planned unplanned handover
+   (``core.handover.replan_after_loss`` — truncate the active leg,
+   hand the *unprocessed remainder* to the successor) must cost less
+   simulated time than the naive alternative of restarting the whole
+   space computation from scratch on the successor.
+3. **Degradation curve** (measurement): engine wall-clock and final
+   accuracy across increasing ``FaultPlan.generate`` fault rates —
+   how gracefully training degrades as failures multiply.
+
+Rows land in ``BENCH_resilience.json`` via ``benchmarks.run --json``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import FULL, row
+
+def _smoke() -> bool:
+    # read lazily: benchmarks.run sets the env var AFTER importing us
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+
+
+def _chaos_config():
+    from repro.fl.rounds import FLConfig
+    return FLConfig(
+        n_devices=12, n_air=2,
+        train_fraction=0.05 if FULL else 0.01,
+        eval_size=512 if FULL else 64,
+        h_local=3, execution="sequential", seed=0)
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def bench_chaos_completion() -> bool:
+    """Gate 1: the chaos preset completes with a finite global model."""
+    from repro.sim.engine import SAGINEngine
+
+    n_rounds = 4 if _smoke() else 6
+    engine = SAGINEngine("chaos", fl=_chaos_config())
+    t0 = time.perf_counter()
+    engine.run(n_rounds)
+    wall = time.perf_counter() - t0
+    inj = engine.fault_injector
+    finite = engine.global_params is not None and _finite(
+        engine.global_params)
+    # in-round faults must all be absorbed; isl_partition recovery
+    # legitimately fails when the quorum collapses, so it is not gated
+    in_round = ("sat_loss", "straggler", "nan_update", "trainer_crash")
+    absorbed = all(inj.recovered[k] >= inj.injected[k] for k in in_round)
+    ok = finite and absorbed
+    row("resilience.chaos_complete", wall * 1e6,
+        f"finite={finite} rounds={n_rounds} "
+        f"injected={sum(inj.injected.values())} "
+        f"recovered={sum(inj.recovered.values())}",
+        metrics={"injected": dict(inj.injected),
+                 "recovered": dict(inj.recovered),
+                 "merges": len(engine.merges),
+                 "gate": "finite global model + all in-round faults "
+                         "recovered", "ok": ok})
+    return ok
+
+
+def bench_recovery_vs_restart() -> bool:
+    """Gate 2: unplanned-handover recovery beats restart-from-scratch."""
+    from repro.core.handover import replan_after_loss, space_schedule
+    from repro.core.network import build_default_sagin
+    from repro.core.scheduler import SAGINOrchestrator
+    from repro.core.constellation import WalkerStar
+
+    sagin = build_default_sagin(n_devices=10, n_air=2, seed=0)
+    orch = SAGINOrchestrator(sagin, constellation=WalkerStar(),
+                             sat_f_seed=0)
+    orch._refresh_satellites()
+    n = max(2000.0, float(sagin.n_sat_samples) or 2000.0)
+    schedule = space_schedule(n, sagin)
+    loss_t = 0.5 * schedule.total_latency
+    t0 = time.perf_counter()
+    recovered, restart = replan_after_loss(schedule, loss_t, sagin)
+    us = (time.perf_counter() - t0) * 1e6
+    gain = restart - recovered.total_latency
+    ok = recovered.total_latency < restart
+    row("resilience.replan_vs_restart", us,
+        f"recovered_s={recovered.total_latency:.1f} "
+        f"restart_s={restart:.1f} gain_s={gain:.1f}",
+        metrics={"recovered_s": recovered.total_latency,
+                 "restart_s": restart, "gain_s": gain,
+                 "gate": "recovered < restart", "ok": ok})
+    return ok
+
+
+def bench_degradation_curve() -> None:
+    """Measurement: wall-clock + accuracy vs fault rate (not gated)."""
+    import dataclasses
+
+    from repro.resilience import FaultPlan
+    from repro.scenarios.registry import SCENARIOS, get_scenario, register
+    from repro.sim.engine import SAGINEngine
+
+    n_rounds = 3 if _smoke() else 6
+    rates = (0.0, 0.1) if _smoke() else (0.0, 0.1, 0.3)
+    base = get_scenario("chaos")
+    cfg = _chaos_config()
+    for rate in rates:
+        plan = (None if rate == 0.0 else FaultPlan.generate(
+            seed=7, n_rounds=n_rounds, n_regions=len(base.regions),
+            rates={k: rate for k in ("sat_loss", "straggler",
+                                     "nan_update")}))
+        name = f"chaos@{rate:g}"
+        SCENARIOS.pop(name, None)
+        register(dataclasses.replace(base, name=name, faults=plan))
+        try:
+            engine = SAGINEngine(name, fl=cfg)
+            t0 = time.perf_counter()
+            engine.run(n_rounds)
+            wall = time.perf_counter() - t0
+        finally:
+            SCENARIOS.pop(name, None)
+        accs = [res.accuracies[-1]
+                for res in engine.fl_results.values() if res.accuracies]
+        sim_end = max(t.wall_clock for t in engine.trainers)
+        inj = engine.fault_injector
+        row(f"resilience.degradation.rate{rate:g}", wall * 1e6,
+            f"sim_end_s={sim_end:.1f} "
+            f"mean_final_acc={sum(accs) / len(accs):.3f} "
+            f"faults={sum(inj.injected.values()) if inj else 0}",
+            metrics={"fault_rate": rate, "sim_end_s": sim_end,
+                     "final_accs": [round(a, 4) for a in accs],
+                     "injected": (dict(inj.injected) if inj else {})})
+
+
+def main() -> int:
+    ok = bench_chaos_completion()
+    ok = bench_recovery_vs_restart() and ok
+    bench_degradation_curve()
+    if not ok:
+        print("# resilience gate FAILED", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

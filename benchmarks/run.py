@@ -17,6 +17,10 @@ ones:
   federation-policy sweep (synchronous vs soft_async vs partial
   time-to-target-loss under degraded ISLs) plus the global-vs-
   independent merge comparison.
+* ``BENCH_resilience.json`` — rows from ``resilience``: chaos-preset
+  completion (gated: finite global model, in-round faults recovered),
+  unplanned-handover recovery vs restart-from-scratch (gated:
+  recovery wins), and the fault-rate degradation curve.
 
 ``--smoke`` shrinks every module to CI sizes (exports
 ``REPRO_BENCH_SMOKE=1``) and restricts the run to the artifact-feeding
@@ -43,9 +47,10 @@ ARTIFACT_OF = {
     "sim_scale": "BENCH_sim.json",
     "handover_dynamics": "BENCH_sim.json",
     "cross_region": "BENCH_federation.json",
+    "resilience": "BENCH_resilience.json",
 }
 SMOKE_MODULES = ("sim_scale", "cohort_scaling", "cross_region",
-                 "obs_overhead")
+                 "obs_overhead", "resilience")
 
 
 def _modules():
@@ -53,12 +58,13 @@ def _modules():
                    cross_region, fig4_time_to_accuracy,
                    fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
                    fl_payload_scaling, handover_dynamics, kernels_micro,
-                   obs_overhead, roofline_report, sim_scale)
+                   obs_overhead, resilience, roofline_report, sim_scale)
     return [
         ("sim_scale", sim_scale),
         ("cross_region", cross_region),
         ("cohort_scaling", cohort_scaling),
         ("obs_overhead", obs_overhead),
+        ("resilience", resilience),
         ("fig5_compute_ablation", fig5_compute_ablation),
         ("handover_dynamics", handover_dynamics),
         ("fl_payload_scaling", fl_payload_scaling),
@@ -124,7 +130,7 @@ def main() -> None:
     if args.json:
         os.makedirs(args.out_dir, exist_ok=True)
         for target in ("BENCH_cohort.json", "BENCH_sim.json",
-                       "BENCH_federation.json"):
+                       "BENCH_federation.json", "BENCH_resilience.json"):
             feeders = [n for n, _ in _modules()
                        if ARTIFACT_OF.get(n) == target]
             ran = [n for n in feeders if n in rows_by_module]

@@ -32,6 +32,10 @@ SHARD001  error     ``jax.lax`` collective (``psum``/``pmean``/...)
                     with a literal axis name in a function never wired
                     into a ``shard_map``/``pmap`` mesh context in its
                     module (unbound axis at trace time)
+RES001    warning   bare ``assert`` in library code (stripped under
+                    ``python -O``; resilience paths must fail loudly —
+                    raise ``ValueError`` or use
+                    ``repro.analysis.contracts``)
 ========  ========  ==================================================
 
 All rules resolve import aliases (``import numpy as np``, ``from jax
@@ -975,6 +979,28 @@ def _literal_axis_names(node: Optional[ast.expr]) -> Optional[List[str]]:
             names.append(elt.value)
         return names or None
     return None
+
+
+# ---------------------------------------------------------------------------
+# RES001 — bare assert in library code
+# ---------------------------------------------------------------------------
+@register("RES001", "assert-in-library", WARNING, (LIBRARY,),
+          "bare assert in library code vanishes under python -O")
+def check_res001(ctx: FileContext):
+    """``assert`` compiles to nothing under ``python -O``, so a guard
+    written as one silently stops guarding in optimized runs — the
+    opposite of what the resilience subsystem needs (faults must fail
+    LOUDLY so recovery paths can engage).  Library code should raise
+    ``ValueError``/``TypeError`` or route through
+    ``repro.analysis.contracts``; ``assert`` stays fine in tests (where
+    pytest rewrites it) and scratch/bench code."""
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assert):
+            yield (node,
+                   "bare assert in library code — stripped under "
+                   "python -O, so the guard silently disappears; raise "
+                   "ValueError (or use repro.analysis.contracts) so "
+                   "invalid state fails loudly in every mode")
 
 
 @register("SHARD001", "collective-outside-shard-map", ERROR,

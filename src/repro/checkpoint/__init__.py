@@ -1,3 +1,5 @@
 from .ckpt import load_pytree, save_pytree, handover_state
+from .engine import restore_engine, save_engine
 
-__all__ = ["load_pytree", "save_pytree", "handover_state"]
+__all__ = ["load_pytree", "save_pytree", "handover_state",
+           "restore_engine", "save_engine"]

@@ -3,12 +3,18 @@
 Also provides ``handover_state``: the serialized blob a satellite transmits
 to its successor (model + optimizer state + remaining-data manifest), whose
 byte size feeds the handover-delay model (eq. 7).
+
+Write discipline: both the ``.npz`` payload and its ``.tree`` structure
+sidecar land via temp file + ``os.replace`` — a crash mid-save leaves
+the previous checkpoint intact, never a torn file (the engine-level
+snapshots in :mod:`repro.checkpoint.engine` build on this).
 """
 from __future__ import annotations
 
 import io
 import json
 import os
+import tempfile
 from typing import Any, Dict, Tuple
 
 import jax
@@ -25,24 +31,70 @@ def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _npz_path(path: str) -> str:
+    """Normalized on-disk npz destination for ``path``."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _atomic_write_bytes(path: str, payload: bytes) -> None:
+    """Write ``payload`` to ``path`` via temp file + ``os.replace``."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 def save_pytree(tree, path: str) -> int:
-    """Save a pytree to ``path`` (npz + structure json). Returns bytes."""
+    """Save a pytree to ``path`` (npz + structure sidecar). Returns bytes.
+
+    Both files are written atomically (temp file + ``os.replace``); the
+    byte count is that of the npz payload regardless of whether ``path``
+    already carries the ``.npz`` suffix.
+    """
     flat = _flatten_with_paths(tree)
     treedef = jax.tree_util.tree_structure(tree)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **flat)
-    with open(path + ".tree", "w") as f:
-        f.write(str(treedef))
-    return os.path.getsize(path if path.endswith(".npz") else path + ".npz")
+    npz = _npz_path(path)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    _atomic_write_bytes(npz, buf.getvalue())
+    _atomic_write_bytes(npz + ".tree", str(treedef).encode("utf-8"))
+    return os.path.getsize(npz)
 
 
 def load_pytree(template, path: str):
-    """Load into the structure of ``template`` (keys must match)."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
+    """Load into the structure of ``template`` (keys must match).
+
+    Raises :class:`ValueError` on a leaf-key mismatch with the template
+    and on a ``.tree`` structure-sidecar mismatch (when the sidecar
+    exists — pre-hardening checkpoints may lack one).
+    """
+    path = _npz_path(path)
     data = np.load(path)
     flat_t = _flatten_with_paths(template)
-    assert set(flat_t) == set(data.files), "checkpoint structure mismatch"
+    if set(flat_t) != set(data.files):
+        missing = sorted(set(flat_t) - set(data.files))
+        extra = sorted(set(data.files) - set(flat_t))
+        raise ValueError(
+            f"checkpoint structure mismatch for {path}: "
+            f"missing keys {missing[:5]}{'...' if len(missing) > 5 else ''}, "
+            f"unexpected keys {extra[:5]}{'...' if len(extra) > 5 else ''}")
+    tree_path = path + ".tree"
+    if os.path.exists(tree_path):
+        with open(tree_path, "r", encoding="utf-8") as f:
+            saved_def = f.read().strip()
+        want_def = str(jax.tree_util.tree_structure(template)).strip()
+        if saved_def != want_def:
+            raise ValueError(
+                f"checkpoint treedef mismatch for {path}: saved structure "
+                f"{saved_def!r} != template structure {want_def!r}")
     leaves, treedef = jax.tree_util.tree_flatten(template)
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     new_leaves = []

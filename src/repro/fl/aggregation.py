@@ -27,6 +27,7 @@ path on TPU.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import List, Optional, Sequence
 
@@ -95,6 +96,34 @@ def fedavg_stacked_multi(stacked_parts: Sequence, weights,
     buffers (only meaningful on accelerator backends)."""
     fn = _fedavg_multi_donated if donate else _fedavg_multi
     return fn(tuple(stacked_parts), weights, interpret=interpret)
+
+
+@jax.jit
+def client_finite_mask(stacked_params) -> jnp.ndarray:
+    """Per-client finiteness over stacked params (leading client axis C).
+
+    Returns a boolean ``(C,)`` vector: ``True`` where EVERY leaf element
+    of that client's model is finite.  One fused device-side reduction —
+    the quarantine gate the cohort engine applies before aggregation, so
+    a NaN/Inf client update never reaches the eq.-(13) weighted sum.
+    """
+    def leaf_ok(leaf):
+        return jnp.all(jnp.isfinite(leaf.reshape(leaf.shape[0], -1)),
+                       axis=1)
+
+    masks = [leaf_ok(leaf)
+             for leaf in jax.tree_util.tree_leaves(stacked_params)]
+    return functools.reduce(jnp.logical_and, masks)
+
+
+def tree_all_finite(params) -> bool:
+    """Host-side: True when every leaf element of ``params`` is finite.
+
+    The sequential round loop's quarantine gate (one model at a time);
+    forces a device sync, so it only runs when quarantine is armed.
+    """
+    return all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree_util.tree_leaves(params))
 
 
 def fedavg_pytrees(params_list: List, weights,

@@ -65,7 +65,8 @@ import numpy as np
 from repro.analysis import contracts
 from repro.data.pipeline import BucketedCohort, build_bucketed_cohort
 
-from .aggregation import fedavg_stacked_multi, shard_weighted_aggregate
+from .aggregation import (client_finite_mask, fedavg_stacked_multi,
+                          shard_weighted_aggregate)
 from .client import cohort_local_update, cohort_round_step_donated
 
 SHARDING_MODES = ("auto", "mesh", "off")
@@ -154,6 +155,9 @@ class CohortEngine:
         self.signatures: set = set()
         self.round_signatures: set = set()
         self.stats = CohortEngineStats()
+        # clients quarantined (non-finite update dropped before the
+        # aggregate) in the most recent round() call
+        self.last_quarantined = 0
 
     # -- cohort construction ------------------------------------------------
     def build(self, x: np.ndarray, y: np.ndarray,
@@ -231,7 +235,8 @@ class CohortEngine:
                     "cohort.shard_pad_clients").set(st.shard_pad_clients)
 
     def round(self, params, cohort: BucketedCohort, lr: float,
-              total: int) -> Tuple[object, List[float]]:
+              total: int, corrupt: Sequence[int] = (),
+              quarantine: bool = False) -> Tuple[object, List[float]]:
         """Train every bucket and aggregate — one FL round on device.
 
         Returns ``(new_global_params, losses)`` with ``losses`` the real
@@ -239,12 +244,25 @@ class CohortEngine:
         ``self.donate`` the params argument is consumed (see module
         docstring).
 
+        ``corrupt`` (fault injection: canonical client positions whose
+        trained models are NaN-filled AFTER the local update — RNG
+        streams untouched) and ``quarantine`` (drop non-finite client
+        updates before aggregation, renormalizing the eq.-(13) weights
+        over the survivors; the drop count lands in
+        :attr:`last_quarantined`) route the round through the split
+        single-device path — the fused donated and mesh-sharded programs
+        have no masking hook — so a faulted round on a sharded engine
+        degrades to one device for that round (documented trade: chaos
+        rounds are rare and correctness beats throughput under faults).
+
         With ``self.guard``, a round whose layout signature is already
         warm runs under :func:`repro.analysis.contracts.no_recompile`;
         a recompile there raises ``ContractViolation`` instead of
         silently burning compile time every round.
         """
         tr = self.tracer
+        faulted = bool(corrupt) or quarantine
+        self.last_quarantined = 0
         if tr.enabled:
             # recompiles = bucket shapes not yet in the signature cache
             # (the PR-6 no_recompile contract's counter, as a metric)
@@ -256,14 +274,21 @@ class CohortEngine:
             m.counter("cohort.bucket_dispatches").inc(len(cohort.buckets))
             m.counter("cohort.real_elements").inc(cohort.real_elements)
             m.counter("cohort.layout_elements").inc(cohort.layout_elements)
-        warm = self.guard and (self._round_signature(cohort)
-                               in self.round_signatures)
+        # a faulted round may select a different compiled program than
+        # the warm one (fused -> split), so the guard stands down for it
+        warm = (self.guard and not faulted
+                and self._round_signature(cohort) in self.round_signatures)
         self._record(cohort)
         if tr.enabled:
             tr.metrics.gauge("cohort.padding_ratio").set(
                 self.stats.padding_ratio)
-        execute = (self._execute_sharded if self.shards > 1
-                   else self._execute)
+        if faulted:
+            def execute(p, c, l, t):
+                return self._execute(p, c, l, t, corrupt=corrupt,
+                                     quarantine=quarantine)
+        else:
+            execute = (self._execute_sharded if self.shards > 1
+                       else self._execute)
         if warm:
             with contracts.no_recompile(label="CohortEngine.round"):
                 return execute(params, cohort, lr, total)
@@ -300,7 +325,8 @@ class CohortEngine:
             time.perf_counter() - t0)
 
     def _execute(self, params, cohort: BucketedCohort, lr: float,
-                 total: int) -> Tuple[object, List[float]]:
+                 total: int, corrupt: Sequence[int] = (),
+                 quarantine: bool = False) -> Tuple[object, List[float]]:
         # host numpy tensors and scalars go into the jitted steps as-is:
         # jit commits them through the C++ shard_args path, which is one
         # copy and no python dispatch — an explicit jnp.asarray per
@@ -308,12 +334,15 @@ class CohortEngine:
         # produces the very same committed f32 buffers)
         lr = np.float32(lr)
         trace = self.tracer.enabled
+        corrupt = set(corrupt)
         # eq.-(13) weights over the concatenated client axis, bucket
         # order; padding clients hold size 0 and therefore weight 0
         w = np.concatenate([cb.sizes for cb in cohort.buckets])
         weights = (w / max(1, total)).astype(np.float32)
+        dropped: List[int] = []
 
-        if len(cohort.buckets) == 1 and self.donate:
+        if len(cohort.buckets) == 1 and self.donate and not (
+                corrupt or quarantine):
             # fused fast path: local update + aggregate in ONE dispatch
             # with the params buffer donated (in-place model update).
             # Without donation the split path below wins — XLA:CPU
@@ -328,18 +357,66 @@ class CohortEngine:
             loss_parts = [losses]
         else:
             stacked_parts, loss_parts = [], []
-            for cb in cohort.buckets:
+            for bi, cb in enumerate(cohort.buckets):
                 t0 = time.perf_counter() if trace else 0.0
                 stacked, losses = cohort_local_update(
                     self.apply_fn, params, cb.xs, cb.ys, cb.mask, lr)
                 if trace:
                     self._trace_dispatch(cb, (stacked, losses), t0)
+                if corrupt:
+                    # fault injection: NaN-fill the victims' trained
+                    # models AFTER the update — every RNG draw is the
+                    # one the clean run makes
+                    rows = [row for row, m in
+                            enumerate(cohort.plans[bi].members)
+                            if m in corrupt]
+                    for row in rows:
+                        stacked = jax.tree_util.tree_map(
+                            lambda a: a.at[row].set(jnp.nan), stacked)
+                        losses = losses.at[row].set(jnp.nan)
                 stacked_parts.append(stacked)
                 loss_parts.append(losses)
-            new_params = fedavg_stacked_multi(stacked_parts, weights,
-                                              donate=self.donate)
+            if quarantine:
+                weights, dropped = self._quarantine_weights(
+                    cohort, stacked_parts, weights)
+                self.last_quarantined = len(dropped)
+            if quarantine and weights.sum() <= 0:
+                # every real update was non-finite: keep the previous
+                # model (the split path never donated params)
+                new_params = params
+            else:
+                new_params = fedavg_stacked_multi(stacked_parts, weights,
+                                                  donate=self.donate)
 
-        return new_params, self._scatter_losses(cohort, loss_parts)
+        losses = self._scatter_losses(cohort, loss_parts)
+        if dropped:
+            bad = set(dropped)
+            losses = [v for i, v in enumerate(losses) if i not in bad]
+        return new_params, losses
+
+    def _quarantine_weights(self, cohort: BucketedCohort,
+                            stacked_parts: List, weights: np.ndarray
+                            ) -> Tuple[np.ndarray, List[int]]:
+        """Zero the aggregation weight of every non-finite client update.
+
+        One fused :func:`client_finite_mask` reduction per bucket; the
+        zeroed weights renormalize inside ``fedavg_stacked`` (it divides
+        by the weight sum), so the eq.-(13) mass redistributes over the
+        finite survivors.  Returns the adjusted weights and the
+        quarantined clients' canonical positions.
+        """
+        w = np.array(weights, copy=True)
+        dropped: List[int] = []
+        off = 0
+        for cb, stacked, plan in zip(cohort.buckets, stacked_parts,
+                                     cohort.plans):
+            finite = np.asarray(client_finite_mask(stacked))
+            for row in np.nonzero(~finite)[0]:
+                if row < len(plan.members):  # real client (not padding)
+                    w[off + row] = 0.0
+                    dropped.append(int(plan.members[row]))
+            off += cb.xs.shape[0]
+        return w, dropped
 
     # -- mesh-sharded execution ---------------------------------------------
     def _make_sharded_step(self):

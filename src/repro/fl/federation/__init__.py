@@ -11,10 +11,10 @@ from .base import (ELECTION_CRITERIA, FederationConfig, FederationState,
                    get_policy, list_policies, register_policy,
                    resolve_federation)
 from .policies import (ElectedHubPolicy, PartialPolicy, SoftAsyncPolicy,
-                       SynchronousPolicy)
+                       SynchronousPolicy, plan_under_partition)
 
 __all__ = ["ELECTION_CRITERIA", "FederationConfig", "FederationState",
            "MergePlan", "MergePolicy", "POLICIES", "RegionFedState",
            "get_policy", "list_policies", "register_policy",
            "resolve_federation", "ElectedHubPolicy", "PartialPolicy",
-           "SoftAsyncPolicy", "SynchronousPolicy"]
+           "SoftAsyncPolicy", "SynchronousPolicy", "plan_under_partition"]

@@ -187,6 +187,49 @@ class SoftAsyncPolicy(MergePolicy):
                          isl_costs=(fetch,))
 
 
+def plan_under_partition(policy: MergePolicy, state: FederationState,
+                         partitioned: Sequence[int],
+                         max_retries: int = 3,
+                         backoff_base: float = 5.0,
+                         backoff_cap: float = 60.0
+                         ) -> Tuple[Optional[MergePlan], float]:
+    """Plan a merge while the ISLs of ``partitioned`` regions are down
+    (a fault-injected merge-time partition, ``repro.resilience``).
+
+    The degraded state marks the partitioned regions' ISLs dead
+    (``isl_scale=0``).  Policies that already tolerate outages
+    (``partial``; ``soft_async`` plans per trigger) simply plan on the
+    degraded state at zero extra cost.  Barrier policies that REQUIRE
+    full participation (``synchronous`` / ``elected_hub``) first retry
+    the rendezvous ``max_retries`` times with capped exponential backoff
+    (``min(backoff_base * 2^k, backoff_cap)`` seconds of simulated ISL
+    re-probing per attempt — the partition is modeled as outlasting the
+    retry budget), then degrade gracefully to the ``partial`` policy's
+    quorum plan over the connected regions.
+
+    Returns ``(plan, delay)``: the (possibly fallback) plan with the
+    retry delay already folded into its merge instant, or ``None`` when
+    even the quorum fails — plus the simulated seconds burned retrying.
+    """
+    import dataclasses as _dc
+
+    partitioned = set(partitioned)
+    degraded = _dc.replace(state, regions=tuple(
+        _dc.replace(r, isl_scale=0.0) if r.index in partitioned else r
+        for r in state.regions))
+    tolerant = (not policy.requires_barrier
+                or isinstance(policy, PartialPolicy))
+    if tolerant or not partitioned:
+        return policy.plan(degraded), 0.0
+    delay = sum(min(backoff_base * (2.0 ** k), backoff_cap)
+                for k in range(max_retries))
+    fallback = PartialPolicy(policy.config)
+    plan = fallback.plan(degraded)
+    if plan is None:
+        return None, delay
+    return _dc.replace(plan, time=plan.time + delay), delay
+
+
 def _policy_names() -> List[str]:  # pragma: no cover - debug helper
     from .base import list_policies
     return list_policies()

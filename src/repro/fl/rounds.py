@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SAGINOrchestrator, build_default_sagin
+from repro.core.handover import replan_after_loss
 from repro.core.network import SAGIN
 from repro.data import FederatedPools, make_dataset, partition
 from repro.models.cnn import build_model, model_bits
@@ -125,6 +126,12 @@ class FLConfig:
     # Wins over Scenario.obs when both are set.  The tracer only
     # observes: trajectories are bit-identical with obs on or off.
     obs: Optional["ObsConfig | str"] = None
+    # Quarantine non-finite client updates before aggregation (weights
+    # renormalize over the finite survivors).  None (default) arms it
+    # exactly when a fault injector is attached (the chaos path) and
+    # keeps the clean path free of the per-client finiteness sync;
+    # True/False force it either way.
+    quarantine: Optional[bool] = None
 
     def resolved_execution(self) -> str:
         if self.execution == "auto":
@@ -248,23 +255,43 @@ def _node_pools(cfg: FLConfig, pools, offline=()) -> List[np.ndarray]:
 
 
 def _round_sequential(cfg: FLConfig, apply_fn, params, ds, node_pools,
-                      total, rng):
-    """Reference engine: one jitted dispatch per node, host-side fedavg."""
+                      total, rng, corrupt=(), quarantine=False):
+    """Reference engine: one jitted dispatch per node, host-side fedavg.
+
+    Returns ``(params, losses, n_quarantined)``.  ``corrupt`` holds the
+    canonical node positions whose trained models are NaN-filled AFTER
+    training (fault injection; RNG draws untouched); with ``quarantine``
+    any non-finite model is dropped before ``fedavg`` — the weights
+    renormalize over the survivors, and a round whose every update was
+    dropped keeps the previous global model.
+    """
+    from .aggregation import tree_all_finite
+    corrupt = set(corrupt)
     new_models, weights, losses = [], [], []
-    for idx in node_pools:
+    n_quarantined = 0
+    for pos, idx in enumerate(node_pools):
         out = _train_node(apply_fn, params, ds, idx, cfg.h_local,
                           cfg.lr, cfg.batch_cap, rng)
-        if out is not None:
-            new_models.append(out[0])
-            weights.append(len(idx) / total)
-            losses.append(out[1])
+        if out is None:
+            continue
+        model, loss = out
+        if pos in corrupt:
+            model = jax.tree_util.tree_map(
+                lambda a: jnp.full_like(a, jnp.nan), model)
+            loss = float("nan")
+        if quarantine and not tree_all_finite(model):
+            n_quarantined += 1
+            continue
+        new_models.append(model)
+        weights.append(len(idx) / total)
+        losses.append(loss)
     if new_models:
         params = fedavg(new_models, weights)
-    return params, losses
+    return params, losses, n_quarantined
 
 
 def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
-                   total, rng, engine=None):
+                   total, rng, engine=None, corrupt=(), quarantine=False):
     """Cohort engine: size-bucketed compiled dispatches + one device-side
     stacked eq.-(13) aggregation (Pallas ``fedavg_agg`` path on TPU).
 
@@ -274,15 +301,26 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
     de-duplicates compilation across throwaways).
     ``cfg.cohort_bucketing="global"`` keeps the PR-1 single-cohort
     global-``Bmax`` layout for comparison benchmarks.
+
+    Returns ``(params, losses, n_quarantined)``; ``corrupt`` /
+    ``quarantine`` are the fault-injection and non-finite-update gates
+    of :meth:`~repro.fl.cohort_engine.CohortEngine.round` (geometric
+    bucketing only — the comparison-grade global layout has no
+    quarantine hook).
     """
     if cfg.cohort_bucketing == "global":
+        if corrupt or quarantine:
+            raise ValueError(
+                "fault injection / quarantine require "
+                "cohort_bucketing='geometric'; the 'global' comparison "
+                "layout has no masking hook")
         from repro.data.pipeline import build_cohort
         cohort = build_cohort(ds.x_train, ds.y_train, node_pools,
                               cfg.h_local, rng, max_batch=cfg.batch_cap,
                               pad_clients=cfg.n_devices + cfg.n_air + 1,
                               batch_align=cfg.cohort_batch_align)
         if cohort is None:
-            return params, []
+            return params, [], 0
         stacked, client_losses = cohort_local_update(
             apply_fn, params, jnp.asarray(cohort.xs),
             jnp.asarray(cohort.ys), jnp.asarray(cohort.mask), cfg.lr)
@@ -290,7 +328,7 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
         params = fedavg_stacked(stacked, weights)
         valid = cohort.sizes > 0
         losses = [float(l) for l in np.asarray(client_losses)[valid]]
-        return params, losses
+        return params, losses, 0
     if cfg.cohort_bucketing != "geometric":
         raise ValueError(f"FLConfig.cohort_bucketing must be 'geometric' "
                          f"or 'global', got {cfg.cohort_bucketing!r}")
@@ -303,8 +341,10 @@ def _round_batched(cfg: FLConfig, apply_fn, params, ds, node_pools,
     cohort = engine.build(ds.x_train, ds.y_train, node_pools, cfg.h_local,
                           rng, max_batch=cfg.batch_cap)
     if cohort is None:
-        return params, []
-    return engine.round(params, cohort, cfg.lr, total)
+        return params, [], 0
+    params, losses = engine.round(params, cohort, cfg.lr, total,
+                                  corrupt=corrupt, quarantine=quarantine)
+    return params, losses, engine.last_quarantined
 
 
 class RegionTrainer:
@@ -378,6 +418,13 @@ class RegionTrainer:
                                         intervals=intervals)
         self._region_name = (self.region.name if self.region is not None
                              else f"region{cfg.region_index}")
+        # fault injection (repro.resilience): the engine attaches its
+        # shared FaultInjector here; None = clean run, zero overhead
+        self.faults = None
+        # last realized ISL scale, mirrored out of the round record so
+        # federation snapshots survive checkpoint/resume (orchestrator
+        # records are not checkpointed)
+        self._last_isl_scale = 1.0
         # dynamics emits `outage` events against the tracer's round
         # context (set below in step()) instead of plumbing region
         # identity through the orchestrator call chain
@@ -427,8 +474,6 @@ class RegionTrainer:
         data mass, model payload, and the ISL state its dynamics
         realized in the last completed round.  The trainer emits state;
         merge SEMANTICS live entirely in ``repro.fl.federation``."""
-        events = (self.orch.records[-1].events if self.orch.records
-                  else None)
         return RegionFedState(
             index=index,
             name=self.region.name if self.region is not None else str(index),
@@ -436,9 +481,8 @@ class RegionTrainer:
             data_mass=float(self.total_samples),
             model_bits=float(self.sagin.model_bits),
             z_isl=float(self.sagin.z_isl),
-            isl_scale=(float(events.isl_scale) if events is not None
-                       else 1.0),
-            rounds_done=len(self.orch.records))
+            isl_scale=self._last_isl_scale,
+            rounds_done=len(self.result.times))
 
     def install_global(self, params, wall_clock: float):
         """Adopt the post-merge global model and post-merge clock; the
@@ -467,6 +511,9 @@ class RegionTrainer:
             tr.set_context(region=self._region_name, round=r,
                            t_sim=self.orch.wall_clock)
         rec = self.orch.step(r)
+        specs = (self.faults.at(r, cfg.region_index)
+                 if self.faults is not None else ())
+        crash = self._apply_latency_faults(rec, specs)
         _apply_plan_to_pools(rec.plan, self.pools, self.sagin)
         _sync_sizes(self.pools, self.sagin)
 
@@ -474,14 +521,45 @@ class RegionTrainer:
         total = self.pools.total()
         node_pools = _node_pools(cfg, self.pools,
                                  offline=rec.offline_devices)
-        if self.execution == "batched":
-            self.params, losses = _round_batched(
+        # nan_update: the first ceil(severity) canonical nodes' trained
+        # models are NaN-filled AFTER training (the RNG stream is
+        # untouched, so the chaos trajectory stays seed-reproducible)
+        nan_spec = next((s for s in specs if s.kind == "nan_update"), None)
+        corrupt: Sequence[int] = ()
+        if nan_spec is not None and node_pools:
+            n_bad = min(max(1, int(nan_spec.severity)), len(node_pools))
+            corrupt = tuple(range(n_bad))
+        quarantine = (cfg.quarantine if cfg.quarantine is not None
+                      else self.faults is not None)
+        if crash is not None:
+            # trainer process died mid-round: the round's training is
+            # lost, recovery warm-restarts from the last committed model
+            # (params unchanged) after a restart penalty on the clock
+            penalty = crash.severity * rec.realized_latency
+            self.faults.record_injected("trainer_crash",
+                                        penalty_s=penalty)
+            rec.realized_latency += penalty
+            self.orch.wall_clock += penalty
+            losses, n_quar = [], 0
+            self.faults.record_recovered("trainer_crash",
+                                         penalty_s=penalty)
+        elif self.execution == "batched":
+            self.params, losses, n_quar = _round_batched(
                 cfg, self.apply_fn, self.params, self.ds, node_pools,
-                total, self.rng, engine=self.cohort_engine)
+                total, self.rng, engine=self.cohort_engine,
+                corrupt=corrupt, quarantine=quarantine)
         else:
-            self.params, losses = _round_sequential(
+            self.params, losses, n_quar = _round_sequential(
                 cfg, self.apply_fn, self.params, self.ds, node_pools,
-                total, self.rng)
+                total, self.rng, corrupt=corrupt, quarantine=quarantine)
+        if corrupt and self.faults is not None:
+            self.faults.record_injected("nan_update",
+                                        n_corrupt=len(corrupt))
+            if quarantine and n_quar >= len(corrupt):
+                self.faults.record_recovered("nan_update",
+                                             quarantined=n_quar)
+        if n_quar:
+            tr.metrics.counter("quarantine.updates").inc(n_quar)
 
         _, acc = evaluate(self.apply_fn, self.params, self.x_eval,
                           self.y_eval)
@@ -499,9 +577,49 @@ class RegionTrainer:
         res.layer_portions.append({
             "ground": n_ground / total, "air": n_air / total,
             "space": len(self.pools.sat) / total})
+        self._last_isl_scale = (float(rec.events.isl_scale)
+                                if rec.events is not None else 1.0)
         if tr.enabled:
             self._emit_round_spans(r, rec, res)
         return rec
+
+    def _apply_latency_faults(self, rec, specs):
+        """Apply this round's latency-shaped faults to the round record
+        and the wall clock; returns the ``trainer_crash`` spec (handled
+        at the training dispatch) or ``None``.
+
+        ``sat_loss`` kills the serving satellite at
+        ``severity * tau_S`` into the space schedule and re-plans onto
+        the successor chain (:func:`repro.core.handover.replan_after_loss`
+        — the unplanned mid-window handover); ``straggler`` stretches
+        the realized round latency by ``severity``x.  Both are absorbed
+        as extra realized latency — the round still completes, which IS
+        the recovery."""
+        crash = None
+        for spec in specs:
+            if spec.kind == "sat_loss":
+                loss_t = spec.severity * rec.schedule.total_latency
+                recovered, _ = replan_after_loss(rec.schedule, loss_t,
+                                                 self.sagin)
+                delta = max(0.0, recovered.total_latency
+                            - rec.schedule.total_latency)
+                self.faults.record_injected("sat_loss", loss_time=loss_t,
+                                            delta_s=delta)
+                rec.schedule = recovered
+                rec.realized_latency += delta
+                self.orch.wall_clock += delta
+                self.faults.record_recovered("sat_loss", delta_s=delta)
+            elif spec.kind == "straggler":
+                delta = max(0.0, (spec.severity - 1.0)
+                            * rec.realized_latency)
+                self.faults.record_injected("straggler",
+                                            slowdown=spec.severity)
+                rec.realized_latency += delta
+                self.orch.wall_clock += delta
+                self.faults.record_recovered("straggler", delta_s=delta)
+            elif spec.kind == "trainer_crash":
+                crash = spec
+        return crash
 
     def _emit_round_spans(self, r: int, rec, res: FLResult):
         """Trace one completed round: offload transfer, handover legs,

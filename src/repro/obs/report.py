@@ -82,6 +82,12 @@ class TraceReport:
     n_spans: int
     kinds: Dict[str, int]
     shard_dispatch: Optional[ShardDispatchReport] = None
+    # resilience (repro.resilience): injected/recovered fault counts by
+    # kind, quarantined client updates, and engine checkpoint resumes
+    faults: Dict[str, int] = dataclasses.field(default_factory=dict)
+    recoveries: Dict[str, int] = dataclasses.field(default_factory=dict)
+    quarantined: int = 0
+    resumes: int = 0
 
 
 def _median(vals: Sequence[float]) -> float:
@@ -212,9 +218,27 @@ def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
                 f"{len(parts)} participant(s) {list(parts)}"))
 
     anomalies.sort(key=lambda a: -a.severity)
+
+    faults: Dict[str, int] = {}
+    recoveries: Dict[str, int] = {}
+    quarantined = 0
+    resumes = 0
+    for s in spans:
+        if s.kind == "fault":
+            k = str(s.attrs.get("fault", s.name))
+            faults[k] = faults.get(k, 0) + 1
+        elif s.kind == "recovery":
+            k = str(s.attrs.get("fault", s.name))
+            recoveries[k] = recoveries.get(k, 0) + 1
+            quarantined += int(s.attrs.get("quarantined", 0))
+        elif s.kind == "resume":
+            resumes += 1
+
     return TraceReport(regions=regions, merges=len(merges),
                        anomalies=anomalies[:top], n_spans=len(spans),
-                       kinds=kinds, shard_dispatch=_shard_dispatch(spans))
+                       kinds=kinds, shard_dispatch=_shard_dispatch(spans),
+                       faults=faults, recoveries=recoveries,
+                       quarantined=quarantined, resumes=resumes)
 
 
 def _table(headers: List[str], rows: List[List[str]]) -> str:
@@ -269,6 +293,19 @@ def render(report: TraceReport) -> str:
                  f"{1e3 * r.wall_s:.1f}"]
                 for r in sd.shards]
         out.append(_table(["shard", "real_elems", "share", "wall_ms"], rows))
+        out.append("")
+    if report.faults or report.recoveries or report.resumes:
+        total_inj = sum(report.faults.values())
+        total_rec = sum(report.recoveries.values())
+        out.append(f"resilience ({total_inj} fault(s) injected, "
+                   f"{total_rec} recovered, "
+                   f"{report.quarantined} update(s) quarantined, "
+                   f"{report.resumes} resume(s))")
+        kinds_seen = sorted(set(report.faults) | set(report.recoveries))
+        rows = [[k, str(report.faults.get(k, 0)),
+                 str(report.recoveries.get(k, 0))] for k in kinds_seen]
+        if rows:
+            out.append(_table(["fault", "injected", "recovered"], rows))
         out.append("")
     if report.anomalies:
         out.append(f"top anomalies ({len(report.anomalies)})")

@@ -23,8 +23,11 @@ Span kinds are CLOSED (:data:`SPAN_KINDS`): ``round`` (one FL round),
 cross-region federation merge, on the synthetic ``federation`` track),
 ``bucket_dispatch`` (one compiled cohort-bucket dispatch; wall-clock
 duration only — fence with ``ObsConfig.device_timing`` for true device
-time), and ``outage`` (a realized dynamics event: ISL fade, uplink
-dead-air, device churn).
+time), ``outage`` (a realized dynamics event: ISL fade, uplink
+dead-air, device churn), ``fault`` / ``recovery`` (one injected fault
+and its graceful-degradation response, from
+``repro.resilience.FaultInjector``), and ``resume`` (an engine
+checkpoint restore, from ``repro.checkpoint.engine``).
 
 Determinism contract: the tracer only OBSERVES.  It never draws from
 any RNG, never touches model parameters, and (``device_timing`` aside,
@@ -54,7 +57,7 @@ from .metrics import NULL_METRICS, Metrics
 TRACE_SCHEMA = "repro-trace/1"
 
 SPAN_KINDS = ("round", "offload", "handover", "merge", "bucket_dispatch",
-              "outage")
+              "outage", "fault", "recovery", "resume")
 
 #: Synthetic region name for cross-region events (merges) that belong to
 #: no single region's timeline.

@@ -1,0 +1,16 @@
+"""``repro.resilience`` — deterministic fault injection + recovery.
+
+The injection harness (:class:`FaultPlan`, :class:`FaultInjector`) lives
+here; the recovery behaviors live in the hot paths they protect:
+unplanned-handover re-planning in ``repro.core.handover``, the
+partition-tolerant merge fallback in ``repro.fl.federation.policies``,
+the non-finite-update quarantine in ``repro.fl.rounds`` /
+``repro.fl.cohort_engine``, and full-engine checkpoint/resume in
+``repro.checkpoint.engine``.  The ``chaos`` scenario preset
+(``repro.scenarios``) wires all of them into one run.
+"""
+from .faults import (DEFAULT_SEVERITY, FAULT_KINDS, FaultInjector,  # noqa: F401
+                     FaultPlan, FaultSpec)
+
+__all__ = ["DEFAULT_SEVERITY", "FAULT_KINDS", "FaultInjector", "FaultPlan",
+           "FaultSpec"]

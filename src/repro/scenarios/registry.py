@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.constellation import AccessInterval, WalkerStar
 from repro.fl.federation import FederationConfig
 from repro.obs import ObsConfig
+from repro.resilience import FaultPlan, FaultSpec
 from repro.sim.dynamics import DynamicsConfig
 from repro.sim.propagation import Region, access_intervals_multi
 
@@ -49,6 +50,11 @@ class Scenario:
     # observability (repro.obs): an ObsConfig or a bare JSONL trace
     # path; disabled when None.  FLConfig.obs wins when both are set.
     obs: Optional[ObsConfig | str] = None
+    # fault injection (repro.resilience): a deterministic schedule of
+    # typed faults the engine injects in FL mode — satellite loss,
+    # merge-time ISL partitions, stragglers, NaN updates, trainer
+    # crashes.  None (default) runs clean with zero overhead.
+    faults: Optional[FaultPlan] = None
     # cross-region federation (engine FL mode) ------------------------------
     # The federation policy decides WHO merges WHAT, WHEN, at WHAT ISL
     # price (repro.fl.federation): cadence, topology, staleness
@@ -197,4 +203,37 @@ register(Scenario(
     description="Paper topology with unreliable ground devices (20% "
                 "offline per round) and satellite compute jitter.",
     dynamics=DynamicsConfig(churn_prob=0.2, sat_freq_jitter_std=0.2),
+))
+
+register(Scenario(
+    name="chaos",
+    description="Resilience gauntlet: three regions under bursty "
+                "Gilbert-Elliott ISL/uplink outages, heavy weather, and "
+                "device churn, with a handcrafted fault schedule that "
+                "exercises every repro.resilience fault kind — "
+                "mid-coverage satellite loss, merge-time ISL partitions, "
+                "stragglers, NaN client updates, and a trainer crash — "
+                "against the recovery paths (unplanned handover re-plan, "
+                "partial-quorum fallback, quarantine, warm restart).",
+    regions=(Region("indiana", 40.0, -86.0),
+             Region("nairobi", -1.3, 36.8),
+             Region("sydney", -33.9, 151.2)),
+    n_devices=12, n_air=2,
+    dynamics=DynamicsConfig(isl_markov=(0.3, 0.5), isl_outage_scale=0.25,
+                            uplink_markov=(0.2, 0.6),
+                            uplink_outage_delay=30.0,
+                            weather_std=0.2, sat_freq_jitter_std=0.2,
+                            churn_prob=0.15),
+    federation=FederationConfig(policy="synchronous", every=2,
+                                topology="ring", half_life=3600.0),
+    faults=FaultPlan(faults=(
+        FaultSpec("sat_loss", round=1, region=0, severity=0.5),
+        FaultSpec("straggler", round=1, region=1, severity=3.0),
+        FaultSpec("isl_partition", round=2, region=2),
+        FaultSpec("nan_update", round=3, region=2, severity=2.0),
+        FaultSpec("trainer_crash", round=4, region=1, severity=0.5),
+        FaultSpec("isl_partition", round=4, region=1),
+        FaultSpec("nan_update", round=5, region=0, severity=1.0),
+    )),
+    horizon=24 * 3600.0,
 ))

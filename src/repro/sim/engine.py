@@ -161,6 +161,7 @@ class SAGINEngine:
         self.merges: List[MergeEvent] = []
         self.global_params = None
         self.federation = None
+        self.fault_injector = None
         self.step_order: List[Tuple[int, int]] = []  # (region, round) pops
         self.traces: List[RegionTrace] = [RegionTrace(region=r)
                                           for r in scenario.regions]
@@ -176,6 +177,14 @@ class SAGINEngine:
                     cfg_i, scenario=scenario,
                     intervals=self.intervals[region.name],
                     tracer=self.tracer))
+            if scenario.faults is not None:
+                # ONE injector shared by the merge path and every
+                # trainer: counts aggregate run-wide (repro.resilience)
+                from repro.resilience import FaultInjector
+                self.fault_injector = FaultInjector(scenario.faults,
+                                                    tracer=self.tracer)
+                for t in self.trainers:
+                    t.faults = self.fault_injector
             return
         nd = n_devices if n_devices is not None else scenario.n_devices
         na = n_air if n_air is not None else scenario.n_air
@@ -192,20 +201,34 @@ class SAGINEngine:
                 dynamics=dynamics, strategy=scenario.strategy))
 
     # -- event loop ---------------------------------------------------------
-    def run(self, n_rounds: int) -> List[RegionTrace]:
-        """Advance every region by ``n_rounds``, event-stepped: at each
-        step the region with the earliest wall clock executes its next
-        round (ties broken by region index for determinism; the pop
+    def run(self, n_rounds: int,
+            final_merge: bool = True) -> List[RegionTrace]:
+        """Advance every region by ``n_rounds`` MORE, event-stepped: at
+        each step the region with the earliest wall clock executes its
+        next round (ties broken by region index for determinism; the pop
         sequence is recorded in ``self.step_order``).  In FL mode with a
         merge cadence, the federation policy additionally plans merges
-        at round boundaries (see :meth:`_policy_merge`)."""
+        at round boundaries (see :meth:`_policy_merge`).
+
+        ``run`` CONTINUES from wherever the engine stands (fresh
+        engines stand at round 0), so ``run(5); run(5)`` and the
+        checkpoint/resume path (``repro.checkpoint.engine``) replay
+        ``run(10)`` exactly — provided the first segment passes
+        ``final_merge=False`` to suppress the forced off-cadence merge
+        at its own last round (an artifact of treating the segment end
+        as the end of training).  Cadence-aligned merges key on the
+        GLOBAL round index either way.
+        """
         if self.trainers:
-            return self._run_fl(n_rounds)
+            return self._run_fl(n_rounds, final_merge)
         self.step_order = []
         if n_rounds <= 0:
             return self.traces
-        heap = [(orch.wall_clock, i, 0)
-                for i, orch in enumerate(self.orchestrators)]
+        heap, ends = [], []
+        for i, orch in enumerate(self.orchestrators):
+            start = len(self.traces[i].records)
+            ends.append(start + n_rounds)
+            heap.append((orch.wall_clock, i, start))
         heapq.heapify(heap)
         tr = self.tracer
         while heap:
@@ -222,12 +245,13 @@ class SAGINEngine:
                         dur_sim=rec.realized_latency, case=rec.plan.case,
                         latency_analytic=rec.latency,
                         n_handovers=rec.schedule.n_handovers)
-            if r + 1 < n_rounds:
+            if r + 1 < ends[i]:
                 heapq.heappush(heap, (orch.wall_clock, i, r + 1))
         tr.flush()
         return self.traces
 
-    def _run_fl(self, n_rounds: int) -> List[RegionTrace]:
+    def _run_fl(self, n_rounds: int,
+                final_merge: bool = True) -> List[RegionTrace]:
         """FL mode: event-step the region trainers; at merge boundaries
         consult the federation policy — barrier policies park regions
         until all arrive, asynchronous policies plan per trigger."""
@@ -237,10 +261,17 @@ class SAGINEngine:
             from repro.fl.federation import get_policy
             policy = get_policy(fed)
         self.step_order = []
-        self.merges = []
         if n_rounds <= 0:
             return self.traces
-        heap = [(t.wall_clock, i, 0) for i, t in enumerate(self.trainers)]
+        starts = {len(t.result.times) for t in self.trainers}
+        if len(starts) != 1:
+            raise ValueError(f"cannot continue an FL run whose regions "
+                             f"stand at unequal round counts: "
+                             f"{sorted(starts)}")
+        start = starts.pop()
+        end = start + n_rounds
+        heap = [(t.wall_clock, i, start)
+                for i, t in enumerate(self.trainers)]
         heapq.heapify(heap)
         waiting: List[Tuple[int, int]] = []  # (region, next_round) parked
         while heap:
@@ -250,20 +281,21 @@ class SAGINEngine:
             self.traces[i].records.append(trainer.step(r))
             nxt = r + 1
             at_boundary = (policy is not None
-                           and (nxt % fed.every == 0 or nxt == n_rounds))
+                           and (nxt % fed.every == 0
+                                or (final_merge and nxt == end)))
             if at_boundary and policy.requires_barrier:
                 waiting.append((i, nxt))
                 if len(waiting) == len(self.trainers):
                     self._policy_merge(policy, nxt)
                     for j, nr in waiting:
-                        if nr < n_rounds:
+                        if nr < end:
                             heapq.heappush(
                                 heap, (self.trainers[j].wall_clock, j, nr))
                     waiting = []
             else:
                 if at_boundary:  # asynchronous boundary: no parking
                     self._policy_merge(policy, nxt, trigger=i)
-                if nxt < n_rounds:
+                if nxt < end:
                     heapq.heappush(heap, (trainer.wall_clock, i, nxt))
         if policy is None and self.trainers:
             # no merging: the "global" model is undefined; expose None so
@@ -300,7 +332,22 @@ class SAGINEngine:
             for rs in state.regions:
                 tr.metrics.gauge(
                     f"federation.isl_scale.{rs.name}").set(rs.isl_scale)
-        plan = policy.plan(state)
+        inj = self.fault_injector
+        partitioned = (inj.partition_at(barrier_round)
+                       if inj is not None else ())
+        if partitioned:
+            # injected merge-time ISL partition: retry with capped
+            # backoff, then degrade to the partial-quorum plan
+            from repro.fl.federation import plan_under_partition
+            inj.record_injected("isl_partition",
+                                regions=list(partitioned),
+                                barrier_round=barrier_round)
+            plan, delay = plan_under_partition(policy, state, partitioned)
+            if plan is not None:
+                inj.record_recovered("isl_partition", policy=plan.policy,
+                                     delay_s=delay)
+        else:
+            plan = policy.plan(state)
         if plan is None:
             # a skipped boundary (quorum miss, nothing to do) is itself
             # an observable event — the report CLI surfaces these

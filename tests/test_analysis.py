@@ -539,6 +539,39 @@ def test_shard001_skipped_in_tests(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# RES001 — bare assert in library code
+# ---------------------------------------------------------------------------
+def test_res001_positive(tmp_path):
+    out = lint(tmp_path, """
+        def restore(state, n_regions):
+            assert len(state) == n_regions, "region count mismatch"
+            return list(state)
+    """)
+    assert rules_hit(out) == ["RES001"]
+    assert out[0].line == 3
+    assert "python -O" in out[0].message
+
+
+def test_res001_negative_raise(tmp_path):
+    out = lint(tmp_path, """
+        def restore(state, n_regions):
+            if len(state) != n_regions:
+                raise ValueError("region count mismatch")
+            return list(state)
+    """)
+    assert out == []
+
+
+def test_res001_skipped_in_tests_and_benchmarks(tmp_path):
+    src = """
+        def check(xs):
+            assert xs, "empty"
+    """
+    assert lint(tmp_path, src, name="tests/test_x.py") == []
+    assert lint(tmp_path, src, name="benchmarks/bench_x.py") == []
+
+
+# ---------------------------------------------------------------------------
 # golden findings, clean file, parse errors
 # ---------------------------------------------------------------------------
 def test_golden_file_line_rule_triples(tmp_path):

@@ -1,7 +1,10 @@
 """Checkpoint + handover-state serialization tests."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import handover_state, load_pytree, save_pytree
 from repro.models.cnn import build_model
@@ -35,3 +38,45 @@ def test_roundtrip_nested_state(tmp_path):
     save_pytree(tree, path)
     loaded = load_pytree(tree, path)
     np.testing.assert_array_equal(np.asarray(loaded["b"][0]), np.ones((2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# hardening: key validation, .tree sidecar, atomic writes --------------------
+# ---------------------------------------------------------------------------
+def test_save_writes_tree_sidecar_and_no_temp_litter(tmp_path):
+    tree = {"w": jnp.ones(3), "b": jnp.zeros(2)}
+    path = str(tmp_path / "m")           # suffix-less spelling
+    save_pytree(tree, path)
+    assert os.path.exists(str(tmp_path / "m.npz"))
+    assert os.path.exists(str(tmp_path / "m.npz.tree"))
+    # atomic writes leave no *.tmp behind
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    loaded = load_pytree(tree, path)     # both spellings load
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.ones(3))
+
+
+def test_load_rejects_key_mismatch(tmp_path):
+    path = str(tmp_path / "a.npz")
+    save_pytree({"w": jnp.ones(3)}, path)
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree({"w": jnp.ones(3), "extra": jnp.zeros(1)}, path)
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree({"renamed": jnp.ones(3)}, path)
+
+
+def test_load_rejects_treedef_sidecar_mismatch(tmp_path):
+    # same flattened keys, different container structure: only the
+    # .tree sidecar can tell them apart
+    path = str(tmp_path / "s.npz")
+    save_pytree({"a": {"b": jnp.ones(2)}}, path)
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        load_pytree({"a/b": jnp.ones(2)}, path)
+
+
+def test_load_without_sidecar_stays_compatible(tmp_path):
+    # pre-hardening checkpoints have no .tree file; key check still runs
+    path = str(tmp_path / "old.npz")
+    save_pytree({"w": jnp.arange(4)}, path)
+    os.unlink(path + ".tree")
+    loaded = load_pytree({"w": jnp.zeros(4, dtype=jnp.int32)}, path)
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.arange(4))

@@ -118,6 +118,87 @@ def test_static_satellite_jitter_does_not_compound():
     assert 0.2 < np.median(scales) < 3.0
 
 
+def test_markov_probability_edges_are_deterministic():
+    # p_fail=0: the chain never leaves the good state
+    never = NetworkDynamics(DynamicsConfig(isl_markov=(0.0, 0.5),
+                                           isl_outage_scale=0.25), seed=0)
+    assert all(never.sample_round(r, 2, 2, 4).isl_scale == 1.0
+               for r in range(20))
+    # p_fail=1, p_recover=1: strict good/bad alternation from round 0
+    flip = NetworkDynamics(DynamicsConfig(isl_markov=(1.0, 1.0),
+                                          isl_outage_scale=0.25), seed=0)
+    scales = [flip.sample_round(r, 2, 2, 4).isl_scale for r in range(6)]
+    assert scales == [0.25, 1.0, 0.25, 1.0, 0.25, 1.0]
+
+
+def test_markov_validation_rejects_bad_pairs():
+    with pytest.raises(ValueError, match="p_recover"):
+        DynamicsConfig(isl_markov=(0.5, 0.0))   # absorbing bad state
+    with pytest.raises(ValueError, match="pair"):
+        DynamicsConfig(uplink_markov=(0.5,))
+    with pytest.raises(ValueError, match="p_fail"):
+        DynamicsConfig(uplink_markov=(1.5, 0.5))
+
+
+def test_markov_stationary_outage_fraction():
+    # Gilbert-Elliott stationary bad fraction is p_fail/(p_fail+p_recover)
+    p_fail, p_recover = 0.2, 0.4
+    dyn = NetworkDynamics(DynamicsConfig(isl_markov=(p_fail, p_recover),
+                                         isl_outage_scale=0.25), seed=7)
+    n = 4000
+    bad = sum(dyn.sample_round(r, 2, 2, 4).isl_scale != 1.0
+              for r in range(n)) / n
+    assert bad == pytest.approx(p_fail / (p_fail + p_recover), abs=0.05)
+
+
+def test_markov_draw_count_is_state_independent():
+    """One uniform per link per round regardless of chain state: two
+    chains with different (p_fail, p_recover) consume their RNG streams
+    identically, so downstream draws never depend on realized states."""
+    cfg_a = DynamicsConfig(isl_markov=(0.9, 0.1), uplink_markov=(0.9, 0.1),
+                           churn_prob=0.3)
+    cfg_b = DynamicsConfig(isl_markov=(0.1, 0.9), uplink_markov=(0.1, 0.9),
+                           churn_prob=0.3)
+    a = NetworkDynamics(cfg_a, rng=np.random.default_rng(5))
+    b = NetworkDynamics(cfg_b, rng=np.random.default_rng(5))
+    for r in range(10):
+        ea = a.sample_round(r, 3, 2, 8)
+        eb = b.sample_round(r, 3, 2, 8)
+        # churn draws come AFTER the chain draws; identical consumption
+        # means identical churn trajectories despite different chains
+        assert ea.offline_devices == eb.offline_devices
+
+
+def test_dynamics_state_dict_roundtrip_resumes_mid_burst():
+    cfg = DynamicsConfig(isl_markov=(0.3, 0.3), uplink_markov=(0.3, 0.3),
+                         weather_std=0.2, churn_prob=0.2)
+    a = NetworkDynamics(cfg, seed=9)
+    for r in range(7):
+        a.sample_round(r, 3, 2, 8)
+    snap = a.state_dict()
+    b = NetworkDynamics(cfg, seed=123)      # wrong seed: state must win
+    b.load_state_dict(snap)
+    for r in range(7, 14):
+        ea, eb = a.sample_round(r, 3, 2, 8), b.sample_round(r, 3, 2, 8)
+        assert ea.isl_scale == eb.isl_scale
+        assert ea.rate_scale == eb.rate_scale
+        assert ea.uplink_delays == eb.uplink_delays
+        assert ea.offline_devices == eb.offline_devices
+
+
+def test_all_churn_round_keeps_nan_loss_sentinel():
+    """churn_prob=1.0 knocks every ground device offline; the dynamics
+    report all of them and the orchestrator still conserves samples."""
+    sagin = build_default_sagin(n_devices=6, n_air=2, seed=0)
+    total = sagin.total_samples
+    orch = SAGINOrchestrator(
+        sagin, dynamics=NetworkDynamics(DynamicsConfig(churn_prob=1.0),
+                                        seed=0))
+    rec = orch.step(0)
+    assert len(rec.offline_devices) == 6
+    assert sum(rec.ground_sizes) + sum(rec.air_sizes) + rec.sat_size == total
+
+
 def test_quiet_events_leave_latency_untouched():
     sagin = build_default_sagin(n_devices=4, n_air=1, seed=0)
     orch = SAGINOrchestrator(
