@@ -48,9 +48,10 @@ ARTIFACT_OF = {
     "handover_dynamics": "BENCH_sim.json",
     "cross_region": "BENCH_federation.json",
     "resilience": "BENCH_resilience.json",
+    "serve": "BENCH_serve.json",
 }
 SMOKE_MODULES = ("sim_scale", "cohort_scaling", "cross_region",
-                 "obs_overhead", "resilience")
+                 "obs_overhead", "resilience", "serve")
 
 
 def _modules():
@@ -58,13 +59,15 @@ def _modules():
                    cross_region, fig4_time_to_accuracy,
                    fig5_compute_ablation, fig6_alpha_sweep, fig7_pathloss,
                    fl_payload_scaling, handover_dynamics, kernels_micro,
-                   obs_overhead, resilience, roofline_report, sim_scale)
+                   obs_overhead, resilience, roofline_report, serve,
+                   sim_scale)
     return [
         ("sim_scale", sim_scale),
         ("cross_region", cross_region),
         ("cohort_scaling", cohort_scaling),
         ("obs_overhead", obs_overhead),
         ("resilience", resilience),
+        ("serve", serve),
         ("fig5_compute_ablation", fig5_compute_ablation),
         ("handover_dynamics", handover_dynamics),
         ("fl_payload_scaling", fl_payload_scaling),
@@ -130,7 +133,8 @@ def main() -> None:
     if args.json:
         os.makedirs(args.out_dir, exist_ok=True)
         for target in ("BENCH_cohort.json", "BENCH_sim.json",
-                       "BENCH_federation.json", "BENCH_resilience.json"):
+                       "BENCH_federation.json", "BENCH_resilience.json",
+                       "BENCH_serve.json"):
             feeders = [n for n, _ in _modules()
                        if ARTIFACT_OF.get(n) == target]
             ran = [n for n in feeders if n in rows_by_module]

@@ -36,6 +36,10 @@ RES001    warning   bare ``assert`` in library code (stripped under
                     ``python -O``; resilience paths must fail loudly —
                     raise ``ValueError`` or use
                     ``repro.analysis.contracts``)
+TIME001   warning   ``time.time()`` in library/benchmark/example code:
+                    wall-clock is NTP-adjustable and coarse — use
+                    ``time.perf_counter()`` for durations or the
+                    engine's simulated clock for simulated time
 ========  ========  ==================================================
 
 All rules resolve import aliases (``import numpy as np``, ``from jax
@@ -1070,3 +1074,32 @@ def check_shard001(ctx: FileContext):
                f"repro.fl.aggregation.hierarchical_weighted_psum")
 
     yield from visit(ctx.tree, False)
+
+
+# ---------------------------------------------------------------------------
+# TIME001 — wall-clock used where a measurement is implied
+# ---------------------------------------------------------------------------
+@register("TIME001", "wall-clock-for-durations", WARNING,
+          (LIBRARY, BENCH, EXAMPLE),
+          "time.time() in measurement code (non-monotonic, coarse)")
+def check_time001(ctx: FileContext):
+    """Every ``time.time()`` call in library/bench/example code.
+
+    ``time.time()`` is adjustable wall-clock (NTP slew, DST, manual
+    resets) with platform-dependent resolution — a duration measured
+    with it can come out negative.  This stack measures two kinds of
+    time and has a right answer for both: ``time.perf_counter()`` for
+    wall durations (the ``benchmarks.common.timeit_min`` / gateway
+    ``wall_infer`` discipline) and the simulated clock
+    (``trainer.wall_clock`` / span ``t_sim``) for simulated time.
+    Genuine epoch timestamps are rare enough to baseline explicitly.
+    """
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.Call)
+                and _resolve_call(node, ctx.imports) == "time.time"):
+            yield (node,
+                   "time.time() is non-monotonic wall-clock (NTP slew "
+                   "can run it backwards) with coarse resolution: use "
+                   "time.perf_counter() for durations, or the simulated "
+                   "clock (trainer.wall_clock / span t_sim) for "
+                   "simulated time; baseline the rare real timestamp")

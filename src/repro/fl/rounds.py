@@ -81,6 +81,7 @@ if TYPE_CHECKING:  # pragma: no cover - circular-import guard
     from repro.core.constellation import AccessInterval
     from repro.obs import ObsConfig, Tracer
     from repro.scenarios.registry import Scenario
+    from repro.serve.workload import ServeConfig
 
 
 @dataclasses.dataclass
@@ -126,6 +127,12 @@ class FLConfig:
     # Wins over Scenario.obs when both are set.  The tracer only
     # observes: trajectories are bit-identical with obs on or off.
     obs: Optional["ObsConfig | str"] = None
+    # Serving-gateway wiring (repro.serve): a ServeConfig shaping the
+    # request workload / router / batching a ServeGateway attached to
+    # this run uses.  Wins over Scenario.serve; None defers to the
+    # scenario (and ultimately to ServeConfig() defaults).  Training
+    # itself never reads this — serving is strictly read-only.
+    serve: Optional["ServeConfig"] = None
     # Quarantine non-finite client updates before aggregation (weights
     # renormalize over the finite survivors).  None (default) arms it
     # exactly when a fault injector is attached (the chaos path) and

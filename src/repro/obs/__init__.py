@@ -17,16 +17,18 @@ and the tracer never perturbs RNG streams or results either way.
 """
 from .metrics import (Counter, Gauge, Histogram, Metrics,  # noqa: F401
                       NULL_METRICS)
-from .report import TraceReport, analyze, render  # noqa: F401
+from .report import (HANDLED_KINDS, ServingReport, TraceReport,  # noqa: F401
+                     analyze, render)
 from .tracer import (FEDERATION_TRACK, NULL_TRACER, ObsConfig,  # noqa: F401
-                     SPAN_KINDS, Span, TRACE_SCHEMA, Tracer, load_jsonl,
-                     perfetto_path, resolve_obs, to_perfetto, write_jsonl,
-                     write_perfetto)
+                     PERFETTO_KINDS, SPAN_KINDS, Span, TRACE_SCHEMA, Tracer,
+                     load_jsonl, perfetto_path, resolve_obs, to_perfetto,
+                     write_jsonl, write_perfetto)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Metrics", "NULL_METRICS",
-    "TraceReport", "analyze", "render",
-    "FEDERATION_TRACK", "NULL_TRACER", "ObsConfig", "SPAN_KINDS", "Span",
-    "TRACE_SCHEMA", "Tracer", "load_jsonl", "perfetto_path", "resolve_obs",
-    "to_perfetto", "write_jsonl", "write_perfetto",
+    "HANDLED_KINDS", "ServingReport", "TraceReport", "analyze", "render",
+    "FEDERATION_TRACK", "NULL_TRACER", "ObsConfig", "PERFETTO_KINDS",
+    "SPAN_KINDS", "Span", "TRACE_SCHEMA", "Tracer", "load_jsonl",
+    "perfetto_path", "resolve_obs", "to_perfetto", "write_jsonl",
+    "write_perfetto",
 ]

@@ -18,7 +18,17 @@ renders what the paper's latency story needs to be debuggable:
   per-shard ``shard_real`` attrs): each span's host ``dur_wall`` is
   apportioned across shards by their share of the bucket's real
   (unmasked) batch elements, giving per-shard dispatch time, work
-  share, and the aggregate imbalance (max over mean share).
+  share, and the aggregate imbalance (max over mean share);
+* a serving section when the trace holds ``request``/``serve_batch``
+  spans from a :class:`~repro.serve.gateway.ServeGateway`: sustained
+  QPS over the served window, end-to-end latency p50/p99, queueing
+  share, served accuracy, batch fill, and the per-target-kind split
+  (own satellite / ISL neighbour / ground fallback).
+
+:data:`HANDLED_KINDS` is this module's copy of the closed span
+vocabulary — every kind ``analyze``/``render`` knows how to aggregate.
+The vocabulary-sync test locks it against ``tracer.SPAN_KINDS`` and
+``tracer.PERFETTO_KINDS`` so a kind added in only one place fails CI.
 
 Everything here is pure span arithmetic — no jax, no simulator
 imports — so the CLI (``python -m repro.obs report``) stays fast and
@@ -32,6 +42,17 @@ from typing import Dict, List, Optional, Sequence
 from .tracer import FEDERATION_TRACK, Span
 
 STRAGGLER_FACTOR = 1.5
+
+#: Every span kind this report knows how to aggregate/render — must
+#: stay in lockstep with ``tracer.SPAN_KINDS`` (test-locked).
+HANDLED_KINDS = frozenset({
+    "round", "offload", "handover", "merge", "bucket_dispatch", "outage",
+    "fault", "recovery", "resume", "request", "serve_batch",
+})
+
+#: Serving-plane kinds: reported in their own section, excluded from the
+#: per-region TRAINING tables (round stats, latency breakdown, idle).
+SERVING_KINDS = frozenset({"request", "serve_batch"})
 
 
 @dataclasses.dataclass
@@ -75,6 +96,23 @@ class ShardDispatchReport:
 
 
 @dataclasses.dataclass
+class ServingReport:
+    """Aggregated serving-plane spans (``request``/``serve_batch``)."""
+    requests: int = 0
+    batches: int = 0
+    qps: float = 0.0               # requests / served simulated window
+    latency_p50: float = 0.0       # end-to-end simulated seconds
+    latency_p99: float = 0.0
+    latency_mean: float = 0.0
+    wait_mean: float = 0.0         # queueing share
+    served_accuracy: Optional[float] = None
+    mean_batch: float = 0.0        # real elements per dispatch
+    fill: float = 1.0              # real / padded elements
+    by_region: Dict[str, int] = dataclasses.field(default_factory=dict)
+    by_target: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class TraceReport:
     regions: List[RegionReport]
     merges: int
@@ -88,6 +126,8 @@ class TraceReport:
     recoveries: Dict[str, int] = dataclasses.field(default_factory=dict)
     quarantined: int = 0
     resumes: int = 0
+    # serving (repro.serve): present when the trace holds serving spans
+    serving: Optional[ServingReport] = None
 
 
 def _median(vals: Sequence[float]) -> float:
@@ -134,6 +174,48 @@ def _shard_dispatch(spans: Sequence[Span]) -> Optional[ShardDispatchReport]:
                                shards=rows, imbalance=imb)
 
 
+def _percentile(vals: Sequence[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    idx = min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1))))
+    return s[idx]
+
+
+def _serving(spans: Sequence[Span]) -> Optional[ServingReport]:
+    """Fold ``request``/``serve_batch`` spans into the serving section."""
+    reqs = [s for s in spans if s.kind == "request"]
+    batches = [s for s in spans if s.kind == "serve_batch"]
+    if not reqs and not batches:
+        return None
+    sr = ServingReport(requests=len(reqs), batches=len(batches))
+    if reqs:
+        lats = [s.dur_sim for s in reqs]
+        sr.latency_p50 = _percentile(lats, 50)
+        sr.latency_p99 = _percentile(lats, 99)
+        sr.latency_mean = sum(lats) / len(lats)
+        sr.wait_mean = sum(float(s.attrs.get("wait_s", 0.0))
+                           for s in reqs) / len(reqs)
+        t_lo = min(s.t_sim for s in reqs)
+        t_hi = max(s.t_sim + s.dur_sim for s in reqs)
+        if t_hi > t_lo:
+            sr.qps = len(reqs) / (t_hi - t_lo)
+        flags = [s.attrs["correct"] for s in reqs
+                 if s.attrs.get("correct") is not None]
+        if flags:
+            sr.served_accuracy = sum(bool(f) for f in flags) / len(flags)
+        for s in reqs:
+            sr.by_region[s.region] = sr.by_region.get(s.region, 0) + 1
+            route = str(s.attrs.get("route", "?"))
+            sr.by_target[route] = sr.by_target.get(route, 0) + 1
+    if batches:
+        real = sum(int(s.attrs.get("n_real", 0)) for s in batches)
+        padded = sum(int(s.attrs.get("n_pad", 0)) for s in batches)
+        sr.mean_batch = real / len(batches)
+        sr.fill = real / padded if padded else 1.0
+    return sr
+
+
 def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
     """Aggregate a span list into the report structure (pure function)."""
     kinds: Dict[str, int] = {}
@@ -143,12 +225,16 @@ def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
     by_region: Dict[str, List[Span]] = {}
     merges = [s for s in spans if s.kind == "merge"]
     for s in spans:
-        if s.region and s.region != FEDERATION_TRACK:
+        # serving spans get their own section; the per-region tables
+        # (rounds, latency breakdown, idle) describe TRAINING time
+        if (s.region and s.region != FEDERATION_TRACK
+                and s.kind not in SERVING_KINDS):
             by_region.setdefault(s.region, []).append(s)
 
     anomalies: List[Anomaly] = []
     regions: List[RegionReport] = []
-    run_end = max((s.t_sim + s.dur_sim for s in spans), default=0.0)
+    run_end = max((s.t_sim + s.dur_sim for s in spans
+                   if s.kind not in SERVING_KINDS), default=0.0)
 
     for name in sorted(by_region):
         rs = by_region[name]
@@ -238,7 +324,8 @@ def analyze(spans: Sequence[Span], top: int = 5) -> TraceReport:
                        anomalies=anomalies[:top], n_spans=len(spans),
                        kinds=kinds, shard_dispatch=_shard_dispatch(spans),
                        faults=faults, recoveries=recoveries,
-                       quarantined=quarantined, resumes=resumes)
+                       quarantined=quarantined, resumes=resumes,
+                       serving=_serving(spans))
 
 
 def _table(headers: List[str], rows: List[List[str]]) -> str:
@@ -306,6 +393,27 @@ def render(report: TraceReport) -> str:
                  str(report.recoveries.get(k, 0))] for k in kinds_seen]
         if rows:
             out.append(_table(["fault", "injected", "recovered"], rows))
+        out.append("")
+    sv = report.serving
+    if sv is not None:
+        acc = ("-" if sv.served_accuracy is None
+               else f"{sv.served_accuracy:.3f}")
+        out.append(f"serving ({sv.requests} request(s), {sv.batches} "
+                   f"dispatch(es), {sv.qps:.2f} req/s sustained, "
+                   f"served_acc {acc})")
+        out.append(_table(
+            ["p50_s", "p99_s", "mean_s", "wait_s", "batch", "fill"],
+            [[f"{sv.latency_p50:.3f}", f"{sv.latency_p99:.3f}",
+              f"{sv.latency_mean:.3f}", f"{sv.wait_mean:.3f}",
+              f"{sv.mean_batch:.1f}", f"{100 * sv.fill:.0f}%"]]))
+        if sv.by_region:
+            total = sum(sv.by_region.values()) or 1
+            rows = [[name, str(n), f"{100 * n / total:.0f}%"]
+                    for name, n in sorted(sv.by_region.items())]
+            out.append(_table(["region", "requests", "share"], rows))
+        if sv.by_target:
+            out.append("routes: " + " ".join(
+                f"{k}={n}" for k, n in sorted(sv.by_target.items())))
         out.append("")
     if report.anomalies:
         out.append(f"top anomalies ({len(report.anomalies)})")

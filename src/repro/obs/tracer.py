@@ -26,8 +26,11 @@ duration only — fence with ``ObsConfig.device_timing`` for true device
 time), ``outage`` (a realized dynamics event: ISL fade, uplink
 dead-air, device churn), ``fault`` / ``recovery`` (one injected fault
 and its graceful-degradation response, from
-``repro.resilience.FaultInjector``), and ``resume`` (an engine
-checkpoint restore, from ``repro.checkpoint.engine``).
+``repro.resilience.FaultInjector``), ``resume`` (an engine
+checkpoint restore, from ``repro.checkpoint.engine``), ``request``
+(one served inference request, end-to-end, from
+``repro.serve.ServeGateway``), and ``serve_batch`` (one batched
+inference dispatch at a serving node, geometric-padded).
 
 Determinism contract: the tracer only OBSERVES.  It never draws from
 any RNG, never touches model parameters, and (``device_timing`` aside,
@@ -57,7 +60,27 @@ from .metrics import NULL_METRICS, Metrics
 TRACE_SCHEMA = "repro-trace/1"
 
 SPAN_KINDS = ("round", "offload", "handover", "merge", "bucket_dispatch",
-              "outage", "fault", "recovery", "resume")
+              "outage", "fault", "recovery", "resume", "request",
+              "serve_batch")
+
+#: Perfetto display category per span kind.  EVERY kind must have an
+#: entry — :func:`to_perfetto` indexes this mapping directly, so a kind
+#: added to :data:`SPAN_KINDS` without one fails loudly on export (the
+#: vocabulary-sync test in ``tests/test_obs.py`` locks the two, plus
+#: the report renderer's kinds, together).
+PERFETTO_KINDS = {
+    "round": "training",
+    "offload": "training",
+    "handover": "network",
+    "merge": "federation",
+    "bucket_dispatch": "compute",
+    "outage": "network",
+    "fault": "resilience",
+    "recovery": "resilience",
+    "resume": "resilience",
+    "request": "serving",
+    "serve_batch": "serving",
+}
 
 #: Synthetic region name for cross-region events (merges) that belong to
 #: no single region's timeline.
@@ -286,7 +309,11 @@ def to_perfetto(spans: Iterable[Span]) -> dict:
         args["t_wall_s"] = round(s.t_wall, 6)
         if s.dur_wall:
             args["dur_wall_s"] = round(s.dur_wall, 6)
-        base = {"name": s.name, "cat": s.kind, "pid": 1,
+        # cat is a comma-separated category list (Chrome-trace format):
+        # the span kind plus its display group — the mapping lookup is
+        # deliberately unguarded so an unmapped kind fails loudly here
+        base = {"name": s.name,
+                "cat": f"{s.kind},{PERFETTO_KINDS[s.kind]}", "pid": 1,
                 "tid": tid[s.region or "global"],
                 "ts": s.t_sim * 1e6, "args": args}
         if s.dur_sim > 0.0:

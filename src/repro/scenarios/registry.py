@@ -22,6 +22,7 @@ from repro.core.constellation import AccessInterval, WalkerStar
 from repro.fl.federation import FederationConfig
 from repro.obs import ObsConfig
 from repro.resilience import FaultPlan, FaultSpec
+from repro.serve.workload import ServeConfig
 from repro.sim.dynamics import DynamicsConfig
 from repro.sim.propagation import Region, access_intervals_multi
 
@@ -55,6 +56,11 @@ class Scenario:
     # merge-time ISL partitions, stragglers, NaN updates, trainer
     # crashes.  None (default) runs clean with zero overhead.
     faults: Optional[FaultPlan] = None
+    # serving workload (repro.serve): arrival process / router / batching
+    # a ServeGateway attached to this scenario's engine uses.
+    # FLConfig.serve wins when both are set; None means the gateway's
+    # defaults.  Training never reads this field.
+    serve: Optional[ServeConfig] = None
     # cross-region federation (engine FL mode) ------------------------------
     # The federation policy decides WHO merges WHAT, WHEN, at WHAT ISL
     # price (repro.fl.federation): cadence, topology, staleness
@@ -203,6 +209,30 @@ register(Scenario(
     description="Paper topology with unreliable ground devices (20% "
                 "offline per round) and satellite compute jitter.",
     dynamics=DynamicsConfig(churn_prob=0.2, sat_freq_jitter_std=0.2),
+))
+
+register(Scenario(
+    name="flash_crowd",
+    description="Burst-dominated serving traffic over hostile links: "
+                "three regions under the degraded_links outage profile "
+                "while Gilbert-Elliott burst episodes drive 12x request "
+                "spikes against a quiet baseline — the stress case for "
+                "the min-response-time serving router (queues pile onto "
+                "the own satellite exactly when its uplink dead-airs).",
+    regions=(Region("indiana", 40.0, -86.0),
+             Region("nairobi", -1.3, 36.8),
+             Region("sydney", -33.9, 151.2)),
+    n_devices=12, n_air=2,
+    dynamics=DynamicsConfig(isl_outage_prob=0.3, isl_outage_scale=0.25,
+                            uplink_outage_prob=0.2,
+                            uplink_outage_delay=30.0,
+                            weather_std=0.3),
+    serve=ServeConfig(base_rate=1.0, diurnal_amplitude=0.2,
+                      burst_markov=(0.05, 0.2), burst_multiplier=12.0,
+                      router="min_rt"),
+    federation=FederationConfig(policy="synchronous", every=2,
+                                topology="ring", half_life=3600.0),
+    horizon=24 * 3600.0,
 ))
 
 register(Scenario(

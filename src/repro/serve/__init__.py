@@ -1,0 +1,35 @@
+"""``repro.serve`` — request-driven serving over the SAGIN FL stack.
+
+Turn a scenario's dynamics into inference traffic and route it the way
+the paper routes data:
+
+    from repro.fl import FLConfig
+    from repro.serve import ServeConfig, ServeGateway
+    from repro.sim import SAGINEngine
+
+    engine = SAGINEngine("multi_region", fl=FLConfig(...))
+    engine.run(4)                       # train a few rounds
+    gw = ServeGateway(engine, serve=ServeConfig(base_rate=2.0))
+    report = gw.run(duration=600.0)     # serve 10 simulated minutes
+    print(report.summary())
+
+or ``python -m repro.serve --scenario multi_region`` for the CLI.  See
+the module docstrings of :mod:`~repro.serve.workload` (arrivals),
+:mod:`~repro.serve.router` (offloading decision) and
+:mod:`~repro.serve.gateway` (batched dispatch + accounting).
+"""
+from .backends import CNNBackend, TransformerBackend  # noqa: F401
+from .gateway import ServeGateway, ServeReport, resolve_serve  # noqa: F401
+from .router import (LinkState, MinResponseTimeRouter, ROUTERS,  # noqa: F401
+                     RouteDecision, ServeTopology, StaticNearestRouter,
+                     get_router)
+from .workload import (Request, RegionWorkload, ServeConfig,  # noqa: F401
+                       serve_rng)
+
+__all__ = [
+    "CNNBackend", "TransformerBackend",
+    "ServeGateway", "ServeReport", "resolve_serve",
+    "LinkState", "MinResponseTimeRouter", "ROUTERS", "RouteDecision",
+    "ServeTopology", "StaticNearestRouter", "get_router",
+    "Request", "RegionWorkload", "ServeConfig", "serve_rng",
+]

@@ -572,6 +572,70 @@ def test_res001_skipped_in_tests_and_benchmarks(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# TIME001 — time.time() where a measurement is implied
+# ---------------------------------------------------------------------------
+def test_time001_positive_duration(tmp_path):
+    out = lint(tmp_path, """
+        import time
+        def measure(fn):
+            t0 = time.time()
+            fn()
+            return time.time() - t0
+    """)
+    assert rules_hit(out) == ["TIME001"]
+    assert [f.line for f in out] == [4, 6]
+    assert "perf_counter" in out[0].message
+
+
+def test_time001_positive_from_import_alias(tmp_path):
+    out = lint(tmp_path, """
+        from time import time as now
+        def stamp():
+            return now()
+    """)
+    assert rules_hit(out) == ["TIME001"]
+
+
+def test_time001_negative_perf_counter(tmp_path):
+    out = lint(tmp_path, """
+        import time
+        def measure(fn):
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+    """)
+    assert out == []
+
+
+def test_time001_negative_unrelated_time_name(tmp_path):
+    # a local callable named `time` from another module is not the
+    # stdlib wall clock
+    out = lint(tmp_path, """
+        from simclock import time
+        def stamp():
+            return time()
+    """)
+    assert out == []
+
+
+def test_time001_skipped_in_tests(tmp_path):
+    src = """
+        import time
+        def test_fresh():
+            assert time.time() > 0
+    """
+    assert lint(tmp_path, src, name="tests/test_x.py") == []
+    # ...but benchmarks ARE covered: measurement code is the point
+    out = lint(tmp_path, """
+        import time
+        def bench():
+            t0 = time.time()
+            return time.time() - t0
+    """, name="benchmarks/bench_x.py")
+    assert rules_hit(out) == ["TIME001"]
+
+
+# ---------------------------------------------------------------------------
 # golden findings, clean file, parse errors
 # ---------------------------------------------------------------------------
 def test_golden_file_line_rule_triples(tmp_path):

@@ -13,6 +13,7 @@ from repro.obs import (FEDERATION_TRACK, NULL_TRACER, Metrics, ObsConfig,
                        Span, Tracer, analyze, load_jsonl, perfetto_path,
                        resolve_obs, to_perfetto)
 from repro.obs.__main__ import main as obs_main
+from repro.obs.report import render
 from repro.scenarios import Scenario
 from repro.sim import Region, SAGINEngine
 
@@ -65,7 +66,8 @@ def test_span_schema_roundtrip(tmp_path):
     assert {"indiana", FEDERATION_TRACK} <= names
     phases = {e["ph"] for e in events}
     assert {"X", "i", "M"} <= phases
-    x = next(e for e in events if e["ph"] == "X" and e["cat"] == "round")
+    x = next(e for e in events
+             if e["ph"] == "X" and "round" in e["cat"].split(","))
     assert x["ts"] == pytest.approx(10.0 * 1e6)
     assert x["dur"] == pytest.approx(5.0 * 1e6)
 
@@ -263,3 +265,72 @@ def test_obsconfig_replace_is_frozen_dataclass():
     assert dataclasses.replace(cfg, device_timing=True).device_timing
     with pytest.raises(dataclasses.FrozenInstanceError):
         cfg.path = "y"
+
+
+# ---------------------------------------------------------------------------
+# Serving spans: closed vocabulary sync + report section ---------------------
+# ---------------------------------------------------------------------------
+def test_span_vocabulary_three_way_sync():
+    """The closed span vocabulary must stay in sync across the tracer
+    (SPAN_KINDS), the Perfetto exporter (PERFETTO_KINDS), and the report
+    renderer (HANDLED_KINDS) — adding a kind to one place only must fail
+    here, loudly, not silently drop spans from a view."""
+    from repro.obs import HANDLED_KINDS, PERFETTO_KINDS, SPAN_KINDS
+    from repro.obs.report import SERVING_KINDS
+    assert set(SPAN_KINDS) == set(PERFETTO_KINDS.keys()) == set(HANDLED_KINDS)
+    assert SERVING_KINDS <= HANDLED_KINDS
+    assert {"request", "serve_batch"} <= SERVING_KINDS
+    # every Perfetto display group is a non-empty label
+    assert all(g for g in PERFETTO_KINDS.values())
+
+
+def test_unmapped_perfetto_kind_fails_loudly(tmp_path):
+    """A span kind missing from PERFETTO_KINDS must crash the exporter,
+    not export with a silent default category."""
+    from repro.obs import PERFETTO_KINDS, to_perfetto
+    tr = Tracer(ObsConfig())
+    tr.span("request", "req0", region="indiana", round=-1, t_sim=0.0,
+            dur_sim=0.5)
+    removed = PERFETTO_KINDS.pop("request")
+    try:
+        with pytest.raises(KeyError):
+            to_perfetto(tr.spans)
+    finally:
+        PERFETTO_KINDS["request"] = removed
+
+
+def test_report_serving_section():
+    tr = Tracer(ObsConfig())
+    tr.span("round", "indiana/r0", region="indiana", round=0,
+            t_sim=0.0, dur_sim=100.0, case=2, acc=0.5)
+    for k in range(10):
+        tr.span("request", f"req{k}", region="indiana", round=-1,
+                t_sim=float(k), dur_sim=0.5 + 0.01 * k,
+                route="sat" if k % 2 else "isl", wait_s=0.1,
+                correct=(k % 4 != 0))
+    tr.span("serve_batch", "sat0/b1", region="indiana", round=-1,
+            t_sim=10.0, dur_sim=0.2, node="sat0", n_real=10, n_pad=16,
+            queue_after=0)
+    rep = analyze(tr.spans)
+    sv = rep.serving
+    assert sv is not None
+    assert sv.requests == 10 and sv.batches == 1
+    assert sv.latency_p99 >= sv.latency_p50 > 0
+    assert sv.wait_mean == pytest.approx(0.1)
+    assert sv.served_accuracy == pytest.approx(0.7)
+    assert sv.by_region == {"indiana": 10}
+    assert sv.by_target == {"sat": 5, "isl": 5}
+    assert sv.mean_batch == pytest.approx(10.0)
+    assert sv.fill == pytest.approx(10 / 16)
+    # serving spans stay out of the TRAINING tables and run_end
+    assert rep.regions[0].rounds == 1
+    text = render(rep)
+    assert "serving" in text
+    assert "p99_s" in text and "fill" in text and "routes:" in text
+
+
+def test_report_without_serving_spans_has_no_section(traced_engine_run):
+    path, _ = traced_engine_run
+    rep = analyze(load_jsonl(path))
+    assert rep.serving is None
+    assert "serving (" not in render(rep)

@@ -1,0 +1,348 @@
+"""Tests for repro.serve: workload determinism, routing decisions,
+gateway end-to-end behavior, training bit-identity with a gateway
+attached, and the staleness -> served-accuracy gap between synchronous
+and soft_async federation (the acceptance locks of ISSUE 10)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fl.federation import FederationConfig
+from repro.fl.rounds import FLConfig
+from repro.scenarios import get_scenario
+from repro.serve import (CNNBackend, LinkState, RegionWorkload, ServeConfig,
+                         ServeGateway, ServeTopology, TransformerBackend,
+                         get_router, resolve_serve, serve_rng)
+from repro.serve.router import GROUND_RTT, INFER_CYCLES
+from repro.sim.engine import SAGINEngine
+
+TINY = dict(dataset="mnist", n_devices=4, n_air=1, h_local=1,
+            train_fraction=0.005, eval_size=64, seed=0,
+            execution="sequential")
+
+
+def two_region_scenario():
+    base = get_scenario("multi_region")
+    return dataclasses.replace(base, name="_serve_test",
+                               regions=base.regions[:2])
+
+
+@pytest.fixture(scope="module")
+def trained_engine():
+    """One 2-region engine trained a single round, shared by the
+    gateway tests (training is the expensive part)."""
+    fl = FLConfig(n_rounds=1, **TINY)
+    eng = SAGINEngine(two_region_scenario(), fl=fl)
+    eng.run(1)
+    return eng
+
+
+# -- config -----------------------------------------------------------------
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="base_rate"):
+        ServeConfig(base_rate=-1.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        ServeConfig(diurnal_amplitude=1.0)
+    with pytest.raises(ValueError, match="burst_markov"):
+        ServeConfig(burst_markov=(0.5, 0.0))
+    with pytest.raises(ValueError, match="burst_multiplier"):
+        ServeConfig(burst_multiplier=0.5)
+    with pytest.raises(ValueError, match="dt"):
+        ServeConfig(dt=0.0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+
+
+def test_resolve_serve():
+    assert resolve_serve(None) == ServeConfig()
+    cfg = ServeConfig(base_rate=3.0)
+    assert resolve_serve(cfg) is cfg
+    with pytest.raises(TypeError):
+        resolve_serve("min_rt")
+
+
+# -- workload ---------------------------------------------------------------
+def test_workload_replay_deterministic():
+    cfg = ServeConfig(base_rate=5.0, burst_markov=(0.1, 0.3))
+    a = RegionWorkload(cfg, 0, seed=7, n_eval=64)
+    b = RegionWorkload(cfg, 0, seed=7, n_eval=64)
+    other = RegionWorkload(cfg, 1, seed=7, n_eval=64)
+    arr_a = list(a.arrivals(0.0, 60.0))
+    arr_b = list(b.arrivals(0.0, 60.0))
+    arr_other = list(other.arrivals(0.0, 60.0))
+    assert arr_a == arr_b                       # replayable
+    assert arr_a != arr_other                   # per-region streams
+    assert len(arr_a) > 0
+    ts = [t for t, _ in arr_a]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < 60.0 for t in ts)
+    assert all(0 <= s < 64 for _, s in arr_a)
+
+
+def test_workload_serve_stream_never_aliases_training():
+    """The serve-plane generator differs from every training stream
+    rooted at the same region seed (tuple-fold isolation)."""
+    from repro.sim.engine import region_seed
+    sv = serve_rng(0, 0).random(8)
+    train = np.random.default_rng(region_seed(0, 0)).random(8)
+    assert not np.allclose(sv, train)
+
+
+def test_workload_bursts_raise_arrival_count():
+    quiet = ServeConfig(base_rate=2.0, diurnal_amplitude=0.0)
+    bursty = dataclasses.replace(quiet, burst_markov=(0.3, 0.1),
+                                 burst_multiplier=8.0)
+    n_quiet = len(list(RegionWorkload(quiet, 0, 3, 64).arrivals(0, 300)))
+    n_burst = len(list(RegionWorkload(bursty, 0, 3, 64).arrivals(0, 300)))
+    assert n_burst > 2 * n_quiet
+
+
+def test_workload_diurnal_phase():
+    cfg = ServeConfig(base_rate=1.0, diurnal_amplitude=0.5)
+    wl = RegionWorkload(cfg, 0, 0, 64, phase=0.0)
+    peak = wl.rate_at(cfg.diurnal_period / 4.0)       # sin == 1
+    trough = wl.rate_at(3.0 * cfg.diurnal_period / 4.0)
+    assert peak == pytest.approx(1.5)
+    assert trough == pytest.approx(0.5)
+
+
+def test_workload_churn_thins_arrivals():
+    cfg = ServeConfig(base_rate=4.0, diurnal_amplitude=0.0)
+    full = RegionWorkload(cfg, 0, 5, 64, n_devices=20, churn_prob=0.0)
+    thin = RegionWorkload(cfg, 0, 5, 64, n_devices=20, churn_prob=0.8)
+    n_full = len(list(full.arrivals(0, 200)))
+    n_thin = len(list(thin.arrivals(0, 200)))
+    assert n_thin < 0.6 * n_full
+
+
+# -- router -----------------------------------------------------------------
+def make_topo(n=3, fast_sat=5e9):
+    return ServeTopology(sat_f=[fast_sat] * n, ground_f=1e8,
+                         req_bits=6272.0, z_isl=3.125e6, topology="ring")
+
+
+def test_router_prefers_own_sat_when_clean():
+    topo = make_topo()
+    dec = get_router("min_rt", topo).route(0, {}, {})
+    assert dec.target == ("sat", 0)
+    assert dec.est_response > 0
+
+
+def test_router_avoids_uplink_dead_air():
+    """A 30 s uplink outage on the origin's satellite prices every
+    space route out; the ground fallback wins despite slow compute."""
+    topo = make_topo()
+    links = {0: LinkState(uplink_delay=30.0)}
+    dec = get_router("min_rt", topo).route(0, {}, links)
+    assert dec.target == ("ground", 0)
+    assert dec.network == pytest.approx(GROUND_RTT)
+
+
+def test_router_spills_to_isl_neighbour_under_queue_pressure():
+    topo = make_topo()
+    depth = {("sat", 0): 500}
+    dec = get_router("min_rt", topo).route(0, depth, {})
+    assert dec.target in (("sat", 1), ("sat", 2))
+
+
+def test_router_isl_fade_stretches_neighbour_route():
+    topo = make_topo()
+    clean = topo.network_time(0, ("sat", 1), {})
+    faded = topo.network_time(0, ("sat", 1),
+                              {1: LinkState(isl_scale=0.1)})
+    assert faded > clean
+
+
+def test_static_nearest_is_blind():
+    topo = make_topo()
+    links = {0: LinkState(uplink_delay=30.0)}
+    dec = get_router("static_nearest", topo).route(
+        0, {("sat", 0): 500}, links)
+    assert dec.target == ("sat", 0)
+    assert dec.est_response > 30.0      # still priced honestly
+
+def test_service_time_hetero():
+    topo = make_topo(fast_sat=3e9)
+    assert topo.service_time(("sat", 0)) == pytest.approx(INFER_CYCLES / 3e9)
+    assert topo.service_time(("ground", 0)) == pytest.approx(
+        INFER_CYCLES / 1e8)
+
+
+def test_get_router_unknown_raises():
+    with pytest.raises(ValueError, match="static_nearest"):
+        get_router("does_not_exist", make_topo())
+
+
+# -- gateway ----------------------------------------------------------------
+def test_gateway_requires_fl_engine():
+    eng = SAGINEngine(two_region_scenario())      # no fl= -> no trainers
+    with pytest.raises(ValueError, match="FL-mode"):
+        ServeGateway(eng)
+
+
+def test_gateway_end_to_end(trained_engine):
+    gw = ServeGateway(trained_engine,
+                      serve=ServeConfig(base_rate=1.0))
+    rep = gw.run(90.0, t0=0.0)
+    assert rep.requests > 0
+    assert rep.served == rep.requests             # queues fully drained
+    assert rep.batches > 0
+    assert all(len(q) == 0 for q in gw.queues.values())
+    assert rep.latency_p50 > 0
+    assert rep.latency_p99 >= rep.latency_p50
+    assert 0.0 <= rep.served_accuracy <= 1.0
+    assert set(rep.count_by_target) <= {"sat", "isl", "ground"}
+    assert sum(rep.count_by_target.values()) == rep.served
+    assert set(rep.acc_by_region) <= {r.name for r in
+                                      trained_engine.scenario.regions}
+    assert "router=min_rt" in rep.summary()
+    lat = [r.latency for r in gw.completed]
+    assert all(l > 0 for l in lat)
+    assert all(r.wait >= 0 for r in gw.completed)
+
+
+def test_gateway_replay_identical(trained_engine):
+    """Same engine state + same serve config -> identical sessions."""
+    cfg = ServeConfig(base_rate=1.0)
+    r1 = ServeGateway(trained_engine, serve=cfg).run(60.0, t0=0.0)
+    r2 = ServeGateway(trained_engine, serve=cfg).run(60.0, t0=0.0)
+    # qps_wall is host wall-clock throughput — everything else must match
+    assert (dataclasses.replace(r1, qps_wall=0.0)
+            == dataclasses.replace(r2, qps_wall=0.0))
+
+
+def test_gateway_config_precedence(trained_engine):
+    """Argument > FLConfig.serve > Scenario.serve > defaults."""
+    eng = trained_engine
+    gw = ServeGateway(eng)      # multi_region sets no serve -> defaults
+    assert gw.cfg == ServeConfig()
+    arg_cfg = ServeConfig(base_rate=9.0)
+    gw = ServeGateway(eng, serve=arg_cfg)
+    assert gw.cfg is arg_cfg
+
+
+def test_gateway_per_request_dispatch_degenerate(trained_engine):
+    gw = ServeGateway(trained_engine,
+                      serve=ServeConfig(base_rate=1.0, max_batch=1,
+                                        batch_align=1))
+    rep = gw.run(30.0, t0=0.0)
+    assert rep.batches == rep.served              # one dispatch per request
+
+
+def test_transformer_backend_smoke():
+    be = TransformerBackend(seq_len=8)
+    assert be.has_labels is False
+    x = np.zeros((4, 28, 28, 1), np.float32)
+    out = be.predict(0, x, np.arange(4))
+    assert out is None
+    # same width reuses the compiled step and threads the cache
+    be.predict(0, x, np.arange(4))
+    assert be._pos[4] == 2
+
+
+def test_gateway_transformer_backend(trained_engine):
+    gw = ServeGateway(trained_engine, serve=ServeConfig(base_rate=0.3),
+                      backend=TransformerBackend(seq_len=8))
+    rep = gw.run(30.0, t0=0.0)
+    assert rep.served == rep.requests
+    assert rep.served_accuracy is None
+    assert rep.acc_by_region == {}
+
+
+# -- acceptance locks -------------------------------------------------------
+def test_training_bit_identical_with_gateway_attached():
+    """Serving between rounds must not perturb training: params and
+    accuracy trajectories stay bit-identical (read-only contract)."""
+    import jax
+
+    scn = two_region_scenario()
+    fl = FLConfig(n_rounds=2, **TINY)
+
+    plain = SAGINEngine(scn, fl=fl)
+    plain.run(2)
+
+    attached = SAGINEngine(scn, fl=fl)
+    # final_merge=False: split-run == one run (the PR-9 resume contract),
+    # so any residual difference here is the gateway's doing
+    attached.run(1, final_merge=False)
+    gw = ServeGateway(attached, serve=ServeConfig(base_rate=2.0))
+    rep = gw.run(60.0)                            # serve mid-training
+    assert rep.served > 0
+    attached.run(1)                               # resume training
+
+    for a, b in zip(plain.trainers, attached.trainers):
+        assert a.result.accuracies == b.result.accuracies
+        assert a.wall_clock == b.wall_clock
+        for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                          jax.tree_util.tree_leaves(b.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_staleness_served_accuracy_gap():
+    """FedMeld-style staleness must be visible at the serving plane:
+    with an aggressive staleness discount (short half_life), soft_async
+    merges keep regions on diverged, effectively older models, while the
+    synchronous barrier installs one fresh merged model everywhere —
+    and the gateway serves measurably better for it (config/seed locked
+    to a regime with a wide margin)."""
+    import jax
+
+    def served(policy):
+        scn = dataclasses.replace(
+            two_region_scenario(),
+            federation=FederationConfig(policy=policy, every=1,
+                                        topology="ring", half_life=30.0))
+        fl = FLConfig(dataset="mnist", n_devices=4, n_air=1, h_local=2,
+                      train_fraction=0.05, eval_size=256, seed=1,
+                      execution="sequential", n_rounds=3)
+        eng = SAGINEngine(scn, fl=fl)
+        eng.run(3)
+        gw = ServeGateway(eng, serve=ServeConfig(base_rate=2.0))
+        return eng, gw.run(120.0, t0=0.0)
+
+    eng_sync, rep_sync = served("synchronous")
+    eng_async, rep_async = served("soft_async")
+
+    # identical arrival/routing trajectories: only the models differ
+    assert rep_sync.requests == rep_async.requests
+    assert rep_sync.count_by_target == rep_async.count_by_target
+
+    # structural staleness chain: the barrier leaves every region on the
+    # SAME merged params; soft_async leaves them diverged, and its
+    # merges recorded genuinely stale peer snapshots
+    t0, t1 = eng_sync.trainers
+    for la, lb in zip(jax.tree_util.tree_leaves(t0.params),
+                      jax.tree_util.tree_leaves(t1.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    a0, a1 = eng_async.trainers
+    assert any(
+        not np.array_equal(np.asarray(la), np.asarray(lb))
+        for la, lb in zip(jax.tree_util.tree_leaves(a0.params),
+                          jax.tree_util.tree_leaves(a1.params)))
+    assert any(s > 0.0 for m in eng_async.merges for s in m.staleness)
+
+    # ...and the gap shows up in what users actually receive
+    assert rep_sync.served_accuracy > rep_async.served_accuracy + 0.02
+
+
+# -- flash_crowd scenario ---------------------------------------------------
+def test_flash_crowd_registered():
+    scn = get_scenario("flash_crowd")
+    assert scn.serve is not None
+    assert scn.serve.burst_markov is not None
+    assert scn.serve.burst_multiplier >= 10.0
+    assert scn.serve.router == "min_rt"
+    assert scn.dynamics is not None and scn.dynamics.any_active()
+    assert scn.dynamics.uplink_outage_delay > 0   # degraded_links profile
+    assert len(scn.regions) >= 3
+    scn.build_constellation()
+
+
+def test_flash_crowd_burstier_than_defaults():
+    scn = get_scenario("flash_crowd")
+    quiet = dataclasses.replace(scn.serve, burst_markov=None)
+    n_flash = len(list(
+        RegionWorkload(scn.serve, 0, 0, 64).arrivals(0, 600)))
+    n_quiet = len(list(
+        RegionWorkload(quiet, 0, 0, 64).arrivals(0, 600)))
+    assert n_flash > n_quiet

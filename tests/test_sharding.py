@@ -113,3 +113,30 @@ def test_mini_mesh_dryrun_compiles():
                        capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "MINI_DRYRUN_OK" in r.stdout
+
+
+def test_serve_step_donate_false_keeps_cache_readable():
+    """`make_serve_step(donate=False)` must leave the caller's cache
+    buffers alive: the serving gateway's TransformerBackend re-reads a
+    cache it keeps by reference, so a silently donated buffer would
+    poison the next dispatch of the same batch width."""
+    import jax.numpy as jnp
+    from repro.configs.shapes import InputShape
+    from repro.launch.serve import make_serve_step
+    from repro.models import transformer as T
+
+    cfg = get_config("llama3.2-3b").reduced(n_layers=2, d_model=64)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = InputShape("donate_smoke", 8, 2, "decode")
+    step, _ = make_serve_step(cfg, mesh, shape, donate=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, 2, 8)
+    tokens = jnp.zeros((2, 1), jnp.int32)
+
+    logits, new_cache = step(params, cache, tokens, 0)
+    # every original cache leaf is still materializable (not donated)
+    for leaf in jax.tree_util.tree_leaves(cache):
+        np.asarray(leaf)
+    # and replaying from the ORIGINAL cache reproduces the step exactly
+    logits2, _ = step(params, cache, tokens, 0)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
